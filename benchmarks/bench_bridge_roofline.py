@@ -1,0 +1,63 @@
+"""Beyond-paper benches: (a) workload→package co-design (bridge) driven by
+real dry-run artifacts; (b) the roofline table summary (§Roofline)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+import numpy as np
+
+from repro.core.bridge import codesign, signature_from_artifact
+from repro.launch.roofline import ARTIFACT_DIR, format_table, report
+
+from .common import budget, emit, out_dir
+
+
+def run(quick: bool = True):
+    # --- roofline summary over dry-run artifacts -------------------------
+    rows = report("single")
+    ok = [r for r in rows if "error" not in r]
+    if ok:
+        emit("roofline_cells_analyzed", len(ok))
+        emit("roofline_cells_fit_16gb",
+             sum(1 for r in ok if r["fits_16gb"]))
+        dom = {}
+        for r in ok:
+            dom[r["dominant"]] = dom.get(r["dominant"], 0) + 1
+        emit("roofline_dominant_terms", json.dumps(dom).replace(",", ";"))
+        best = max(ok, key=lambda r: r["roofline_fraction"])
+        emit("roofline_best_fraction",
+             round(best["roofline_fraction"], 4),
+             f"{best['arch']}/{best['shape']}")
+
+    # --- bridge co-design on up to 3 real workload signatures ------------
+    arts = sorted(glob.glob(os.path.join(ARTIFACT_DIR, "*__single.json")))
+    picks = [a for a in arts if any(
+        k in a for k in ("qwen3-1.7b__train_4k", "falcon-mamba-7b__decode",
+                         "grok-1-314b__train_4k"))]
+    results = {}
+    for art in picks[: budget(quick, 2, 3)]:
+        rec = json.load(open(art))
+        if not rec.get("ok"):
+            continue
+        mp = art.replace("__single", "__multi")
+        sig = signature_from_artifact(
+            rec, multi_pod_rec=mp if os.path.exists(mp) else None)
+        out = codesign(sig, max_evals=budget(quick, 60, 400),
+                       norm_samples=budget(quick, 16, 64))
+        key = f"{sig.arch}_{sig.shape}"
+        results[key] = {k: v for k, v in out.items() if k != "best_sol"}
+        emit(f"bridge_{key}_improvement",
+             round(out["improvement"], 4),
+             f"pkg={out['package']}")
+    with open(os.path.join(out_dir(), "bridge.json"), "w") as f:
+        json.dump(results, f, indent=1, default=float)
+
+
+def main(quick: bool = True):
+    run(quick)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""Paper Figs. 14 & 15: synthetic per-type traffic — latency & throughput
+of PlaceIT designs vs the 2D-mesh baseline, in both chiplet configurations
+(*baseline*: 1 PHY / no relay on mem+IO; *placeit*: 4 PHY + relay).
+
+Validated claims: C2M / C2I / M2I latency improve in every configuration
+(§VII-B headline: C2M up to -28%, M2I up to -62%); throughput gains need
+the *placeit* configuration.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from repro.core.baseline import MeshBaseline
+from repro.core.chiplets import TRAFFIC_TYPES, paper_arch
+from repro.core.optimize import Evaluator, genetic_algorithm
+from repro.core.runner import GRID_DIMS, PAPER_PARAMS
+from repro.core.placement_homog import HomogRep
+
+from .common import budget, emit, out_dir
+
+
+def optimize_and_compare(arch_name: str, config: str, quick: bool) -> dict:
+    arch = paper_arch(arch_name, config)
+    rep = HomogRep(arch, R=8, C=5, mutation_mode="neighbor-one")
+    rng = np.random.default_rng(0)
+    ev = Evaluator(rep, arch, rng=rng,
+                   norm_samples=budget(quick, 32, 500))
+    ga = PAPER_PARAMS[("homog", 32)]["ga"]
+    res = genetic_algorithm(
+        ev, rng, population=budget(quick, 24, ga["population"]),
+        elitism=budget(quick, 5, ga["elitism"]),
+        tournament=budget(quick, 5, ga["tournament"]),
+        max_generations=budget(quick, 8, 50))
+    base = {k: float(v[0]) for k, v in ev.score(
+        [MeshBaseline(arch).build()[0]]).items()}
+    opt = res.best_metrics
+    out = {}
+    for t in TRAFFIC_TYPES:
+        lat_red = 1.0 - opt[f"lat_{t}"] / base[f"lat_{t}"]
+        thr_gain = opt[f"thr_{t}"] / max(base[f"thr_{t}"], 1e-9) - 1.0
+        out[f"lat_{t}_reduction"] = lat_red
+        out[f"thr_{t}_gain"] = thr_gain
+        emit(f"fig14_15_{config}_{t}_latency_reduction",
+             round(lat_red, 3),
+             f"opt={opt[f'lat_{t}']:.1f}cyc base={base[f'lat_{t}']:.1f}cyc")
+    return out
+
+
+def run(quick: bool = True) -> dict:
+    results = {}
+    for config in ("baseline", "placeit"):
+        results[config] = optimize_and_compare("homog32", config, quick)
+    # headline checks
+    emit("fig14_c2m_latency_improves",
+         results["baseline"]["lat_c2m_reduction"] > 0)
+    emit("fig14_m2i_latency_improves",
+         results["baseline"]["lat_m2i_reduction"] > 0)
+    emit("fig15_placeit_config_c2m_thr_gain",
+         round(results["placeit"]["thr_c2m_gain"], 3))
+    with open(os.path.join(out_dir(), "fig14_15.json"), "w") as f:
+        json.dump(results, f, indent=1, default=float)
+    return results
+
+
+def main(quick: bool = True):
+    run(quick)
+
+
+if __name__ == "__main__":
+    main(quick=os.environ.get("BENCH_FULL", "") != "1")

@@ -1,0 +1,75 @@
+"""Paper Figs. 16-18: trace-driven simulation — average packet latency of
+PlaceIT designs vs the 2D-mesh baseline, authentic and idealized injection
+(§VII-C/D).  Traces are Netrace-like generated cache-coherency chains
+(Table VI region structure; §V-B message mix).
+
+Validated claims: PlaceIT reduces average packet latency on (almost) all
+trace regions; idealized mode stresses the ICI harder.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from repro.core.baseline import MeshBaseline
+from repro.core.chiplets import paper_arch
+from repro.core.netsim import ChipletNet, NetSim
+from repro.core.optimize import Evaluator, genetic_algorithm
+from repro.core.placement_homog import HomogRep
+from repro.core.traces import TraceRegion, generate_trace
+
+from .common import budget, emit, out_dir
+
+
+def run(quick: bool = True) -> dict:
+    results = {}
+    regions = (TraceRegion(budget(quick, 1500, 20000),
+                           budget(quick, 40000, 400000)),
+               TraceRegion(budget(quick, 2500, 40000),
+                           budget(quick, 30000, 300000)))
+    for config in ("baseline", "placeit"):
+        arch = paper_arch("homog32", config)
+        rep = HomogRep(arch, R=8, C=5, mutation_mode="neighbor-one")
+        rng = np.random.default_rng(0)
+        ev = Evaluator(rep, arch, rng=rng,
+                       norm_samples=budget(quick, 32, 500))
+        res = genetic_algorithm(ev, rng, population=budget(quick, 24, 200),
+                                elitism=5, tournament=5,
+                                max_generations=budget(quick, 8, 40))
+        links, _ = rep.links_of(res.best_sol)
+        geo = rep.geometry(res.best_sol)
+        net_opt = ChipletNet.from_links(arch, geo, links)
+        _, geo_b, links_b = MeshBaseline(arch).build()
+        net_base = ChipletNet.from_links(arch, geo_b, links_b)
+        sim_o, sim_b = NetSim(net_opt, arch), NetSim(net_base, arch)
+        per_mode = {}
+        for mode in ("authentic", "idealized"):
+            for ri, reg in enumerate(regions):
+                lo = sim_o.run(generate_trace(net_opt, (reg,), seed=ri),
+                               mode=mode).avg_latency
+                lb = sim_b.run(generate_trace(net_base, (reg,), seed=ri),
+                               mode=mode).avg_latency
+                speedup = lb / lo
+                per_mode[f"{mode}_r{ri}"] = dict(
+                    placeit=lo, baseline=lb, speedup=speedup)
+                emit(f"fig16_{config}_{mode}_region{ri}_speedup",
+                     round(speedup, 3),
+                     f"opt={lo:.1f} base={lb:.1f}")
+        sp = [v["speedup"] for v in per_mode.values()]
+        results[config] = dict(regions=per_mode,
+                               mean_speedup=float(np.mean(sp)))
+        emit(f"fig16_{config}_mean_speedup",
+             round(float(np.mean(sp)), 3))
+    with open(os.path.join(out_dir(), "fig16_18.json"), "w") as f:
+        json.dump(results, f, indent=1, default=float)
+    return results
+
+
+def main(quick: bool = True):
+    run(quick)
+
+
+if __name__ == "__main__":
+    main(quick=os.environ.get("BENCH_FULL", "") != "1")

@@ -1,0 +1,57 @@
+"""Paper Figs. 6 & 12: BR / GA / SA optimization results vs the 2D-mesh
+baseline, homogeneous (§V-B) and heterogeneous (§VI-B) architectures.
+
+Budgets are evaluation-count based (CPU-friendly stand-in for the paper's
+3600 s wall budget); the claims validated are the paper's *orderings*:
+every algorithm beats the baseline; GA/SA beat BR.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+
+from repro.core.runner import Experiment, best_by_algorithm, summarize
+
+from .common import budget, emit, out_dir
+
+
+def run(quick: bool = True, archs=("homog32", "hetero32")) -> dict:
+    evals = budget(quick, 420, 3000)
+    reps = budget(quick, 2, 10)
+    results = {}
+    for arch_name in archs:
+        exp = Experiment(arch_name, "baseline",
+                         algorithms=("br", "ga", "sa"),
+                         repetitions=reps, max_evals=evals,
+                         norm_samples=budget(quick, 32, 500),
+                         sa_chains=budget(quick, 8, 1))
+        recs = exp.run()
+        base_cost, base_metrics = exp.baseline_cost()
+        best = best_by_algorithm(recs)
+        fig = "fig6" if arch_name.startswith("homog") else "fig12"
+        res = {"baseline_cost": base_cost}
+        for algo, r in best.items():
+            res[algo] = r.result.best_cost
+            emit(f"{fig}_{arch_name}_{algo}_best_cost",
+                 round(r.result.best_cost, 4),
+                 f"baseline={base_cost:.4f}")
+        # the paper's qualitative claims
+        emit(f"{fig}_{arch_name}_all_beat_baseline",
+             all(res[a] < base_cost for a in ("br", "ga", "sa")))
+        emit(f"{fig}_{arch_name}_ga_beats_br", res["ga"] <= res["br"])
+        emit(f"{fig}_{arch_name}_sa_beats_br", res["sa"] <= res["br"])
+        res["rows"] = summarize(recs)
+        results[arch_name] = res
+    with open(os.path.join(out_dir(), "fig6_fig12.json"), "w") as f:
+        json.dump(results, f, indent=1, default=float)
+    return results
+
+
+def main(quick: bool = True):
+    run(quick)
+
+
+if __name__ == "__main__":
+    main(quick=os.environ.get("BENCH_FULL", "") != "1")

@@ -1,0 +1,79 @@
+"""Kernel-layer microbenchmarks (CPU: jnp reference path wall-times +
+Pallas interpret-mode correctness cross-checks; real perf is a TPU matter —
+the dry-run roofline carries those numbers).
+
+Measures the PlaceIT scoring hot spot (batched FW) and the LM hot ops.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, ref
+
+from .common import budget, emit
+
+
+def timeit(f, *args, reps=3):
+    f(*args)[0].block_until_ready() if isinstance(f(*args), tuple) else \
+        jax.block_until_ready(f(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(f(*args))
+    return (time.perf_counter() - t0) / reps * 1e6  # us
+
+
+def run(quick: bool = True):
+    rng = np.random.default_rng(0)
+    # --- batched FW (PlaceIT scorer hot spot) --------------------------
+    for B, V in [(4, 128), (16, 128)] + ([] if quick else [(64, 256)]):
+        W = np.full((B, V, V), 1e9, np.float32)
+        for b in range(B):
+            np.fill_diagonal(W[b], 0)
+            for _ in range(V * 3):
+                i, j = rng.integers(V, size=2)
+                W[b, i, j] = W[b, j, i] = min(W[b, i, j], 1.0)
+        f = jax.jit(ref.fw_counts_ref)
+        us = timeit(lambda w: f(w)[0], jnp.array(W))
+        emit(f"kernel_fw_counts_B{B}_V{V}_us", round(us, 1),
+             f"{B / (us / 1e6):.0f} graphs/s")
+
+    # --- flash attention ref path ---------------------------------------
+    B, S, H, Hkv, d = 2, budget(quick, 512, 2048), 8, 2, 64
+    q = jnp.array(rng.standard_normal((B, S, H, d)), jnp.float32)
+    k = jnp.array(rng.standard_normal((B, S, Hkv, d)), jnp.float32)
+    v = jnp.array(rng.standard_normal((B, S, Hkv, d)), jnp.float32)
+    f = jax.jit(lambda q, k, v: ref.attention_ref(q, k, v, causal=True))
+    us = timeit(f, q, k, v)
+    emit(f"kernel_attention_ref_S{S}_us", round(us, 1),
+         f"{2 * B * H * S * S * d * 2 / (us / 1e6) / 1e9:.1f} GFLOP/s")
+
+    # --- selective scan ref ----------------------------------------------
+    Bt, S2, Di, N = 2, budget(quick, 256, 1024), 256, 16
+    x = jnp.array(rng.standard_normal((Bt, S2, Di)), jnp.float32)
+    dt = jnp.array(0.1 + rng.random((Bt, S2, Di)), jnp.float32)
+    A = jnp.array(-rng.random((Di, N)), jnp.float32)
+    Bm = jnp.array(rng.standard_normal((Bt, S2, N)), jnp.float32)
+    Cm = jnp.array(rng.standard_normal((Bt, S2, N)), jnp.float32)
+    Dm = jnp.array(rng.standard_normal(Di), jnp.float32)
+    f = jax.jit(lambda *a: ref.selective_scan_ref(*a)[0])
+    us = timeit(f, x, dt, A, Bm, Cm, Dm)
+    emit(f"kernel_selective_scan_S{S2}_us", round(us, 1))
+
+    # --- interpret-mode cross-check (tiny, correctness-on-CPU story) ----
+    D1, N1 = ops.fw_counts(jnp.array(
+        np.minimum(rng.random((1, 32, 32)).astype(np.float32) * 8, 1e9)
+        + np.where(np.eye(32), -1e9, 0)).clip(0, 1e9), impl="pallas")
+    emit("kernel_fw_pallas_interpret_ok", bool(np.isfinite(
+        np.array(D1)).all()))
+
+
+def main(quick: bool = True):
+    run(quick)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,20 @@
+"""Shared benchmark utilities: CSV emission + budgets."""
+from __future__ import annotations
+
+import os
+import time
+
+
+def emit(name: str, value, derived: str = ""):
+    """One CSV record: name,value,derived — run.py collects these."""
+    print(f"BENCH,{name},{value},{derived}", flush=True)
+
+
+def budget(quick: bool, quick_val, full_val):
+    return quick_val if quick else full_val
+
+
+def out_dir() -> str:
+    d = os.path.join("artifacts", "bench")
+    os.makedirs(d, exist_ok=True)
+    return d

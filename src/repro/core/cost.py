@@ -1,0 +1,62 @@
+"""The user-defined cost function (paper §IV-B).
+
+cost(placement) = sum_t w_lat[t] * lat_t / E[lat_t]
+               + sum_t w_thr[t] * (1/thr_t) / E[1/thr_t]
+               + w_area * area / E[area]
+
+where the expectations are *normalizers*: means of each raw component over
+``norm_samples`` random placements (Table II, "Norm. Samples").  Throughput
+enters inverted so that every term is "lower is better".
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .chiplets import TRAFFIC_TYPES, ArchSpec
+
+_EPS = 1.0e-6
+
+
+@dataclass
+class CostNormalizers:
+    lat: dict = field(default_factory=dict)     # type -> mean latency
+    inv_thr: dict = field(default_factory=dict)  # type -> mean 1/throughput
+    area: float = 1.0
+
+    @staticmethod
+    def from_samples(metrics: dict) -> "CostNormalizers":
+        n = CostNormalizers()
+        for t in TRAFFIC_TYPES:
+            lat = np.asarray(metrics[f"lat_{t}"], dtype=np.float64)
+            thr = np.asarray(metrics[f"thr_{t}"], dtype=np.float64)
+            ok = lat < 1.0e8
+            n.lat[t] = float(lat[ok].mean()) if ok.any() else 1.0
+            n.inv_thr[t] = float((1.0 / np.maximum(thr[ok], _EPS)).mean()) \
+                if ok.any() else 1.0
+        n.area = float(np.asarray(metrics["area"], dtype=np.float64).mean())
+        return n
+
+
+def cost_components(metrics: dict, arch: ArchSpec,
+                    norm: CostNormalizers) -> dict:
+    """Normalized, weighted components (9 of them, Fig. 4)."""
+    comp = {}
+    for i, t in enumerate(TRAFFIC_TYPES):
+        lat = np.asarray(metrics[f"lat_{t}"], dtype=np.float64)
+        thr = np.asarray(metrics[f"thr_{t}"], dtype=np.float64)
+        comp[f"lat_{t}"] = arch.w_lat[i] * lat / max(norm.lat[t], _EPS)
+        comp[f"thr_{t}"] = (arch.w_thr[i]
+                            * (1.0 / np.maximum(thr, _EPS))
+                            / max(norm.inv_thr[t], _EPS))
+    comp["area"] = (arch.w_area
+                    * np.asarray(metrics["area"], dtype=np.float64)
+                    / max(norm.area, _EPS))
+    return comp
+
+
+def total_cost(metrics: dict, arch: ArchSpec, norm: CostNormalizers
+               ) -> np.ndarray:
+    comp = cost_components(metrics, arch, norm)
+    return sum(comp.values())

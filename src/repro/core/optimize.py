@@ -1,0 +1,244 @@
+"""Optimization algorithms (paper §II-B) over placement representations.
+
+Best Random (BR), Genetic Algorithm (GA) and Simulated Annealing (SA), all
+driven through the four representation functions random_placement / mutate /
+merge / get_cost (§IV).  Invalid placements (unconnected chiplets) cause the
+generating operation to be repeated, exactly as in §V-A / §VI-A.
+
+Beyond-paper adaptation (DESIGN.md §3): cost evaluation is *batched* — a GA
+generation or a block of SA chains is scored in a single vmapped JAX call —
+which is what makes the method TPU-friendly.  The faithful sequential
+semantics are preserved: BR/GA evaluate the same individuals they would
+sequentially; "SA x K chains" runs K independent faithful chains.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from .cost import CostNormalizers, total_cost
+from .proxies import make_scorer
+from .topology import ScoreGraph, stack_graphs
+
+
+@dataclass
+class OptResult:
+    best_sol: object
+    best_cost: float
+    best_metrics: dict
+    # (wall_seconds, n_evaluated, best_cost_so_far) samples
+    history: list = field(default_factory=list)
+    n_generated: int = 0          # placements generated incl. retries
+    n_evaluated: int = 0          # placements actually scored
+    normalizers: CostNormalizers | None = None
+
+
+class Evaluator:
+    """rep + scorer + cost normalizers -> batched get_cost()."""
+
+    def __init__(self, rep, arch, *, rng: np.random.Generator,
+                 norm_samples: int = 500, chunk: int = 16, fw_impl=None):
+        self.rep = rep
+        self.arch = arch
+        kw = {"chunk": chunk}
+        if fw_impl is not None:
+            kw["fw_impl"] = fw_impl
+        self.scorer = make_scorer(rep.layout, **kw)
+        self.n_generated = 0
+        sols, graphs = self.generate_valid(
+            lambda r: self.rep.random(r), rng, norm_samples)
+        metrics = self.score(graphs)
+        self.norm = CostNormalizers.from_samples(metrics)
+
+    # -- generation with the paper's retry-until-connected semantics -------
+    def generate_valid(self, op, rng: np.random.Generator, n: int,
+                       max_tries: int = 500):
+        sols, graphs = [], []
+        while len(sols) < n:
+            for _ in range(max_tries):
+                s = op(rng)
+                self.n_generated += 1
+                g = self.rep.score_graph(s)
+                if g.connected:
+                    sols.append(s)
+                    graphs.append(g)
+                    break
+            else:  # pragma: no cover - pathological architecture
+                raise RuntimeError("could not generate a connected placement")
+        return sols, graphs
+
+    def score(self, graphs: list[ScoreGraph]) -> dict:
+        batch = stack_graphs(graphs)
+        return {k: np.asarray(v) for k, v in self.scorer(batch).items()}
+
+    def costs(self, graphs: list[ScoreGraph]) -> tuple[np.ndarray, dict]:
+        metrics = self.score(graphs)
+        return np.asarray(total_cost(metrics, self.arch, self.norm)), metrics
+
+
+def _metrics_row(metrics: dict, i: int) -> dict:
+    return {k: float(v[i]) for k, v in metrics.items()}
+
+
+# ---------------------------------------------------------------------------
+# Best Random (§II-B1).
+# ---------------------------------------------------------------------------
+
+def best_random(ev: Evaluator, rng: np.random.Generator, *,
+                time_budget_s: float | None = None,
+                max_evals: int | None = None,
+                batch: int = 32) -> OptResult:
+    res = OptResult(None, np.inf, {})
+    t0 = time.monotonic()
+    while True:
+        if time_budget_s is not None and time.monotonic() - t0 > time_budget_s:
+            break
+        if max_evals is not None and res.n_evaluated >= max_evals:
+            break
+        sols, graphs = ev.generate_valid(ev.rep.random, rng, batch)
+        costs, metrics = ev.costs(graphs)
+        res.n_evaluated += len(sols)
+        i = int(np.argmin(costs))
+        if costs[i] < res.best_cost:
+            res.best_cost = float(costs[i])
+            res.best_sol = sols[i]
+            res.best_metrics = _metrics_row(metrics, i)
+        res.history.append((time.monotonic() - t0, res.n_evaluated,
+                            res.best_cost))
+    res.n_generated = ev.n_generated
+    res.normalizers = ev.norm
+    return res
+
+
+# ---------------------------------------------------------------------------
+# Genetic Algorithm (§II-B2; parameters Table III/IV).
+# ---------------------------------------------------------------------------
+
+def genetic_algorithm(ev: Evaluator, rng: np.random.Generator, *,
+                      population: int, elitism: int, tournament: int,
+                      p_mutation: float = 0.5,
+                      time_budget_s: float | None = None,
+                      max_generations: int | None = None) -> OptResult:
+    res = OptResult(None, np.inf, {})
+    t0 = time.monotonic()
+    sols, graphs = ev.generate_valid(ev.rep.random, rng, population)
+    gen = 0
+    while True:
+        costs, metrics = ev.costs(graphs)
+        res.n_evaluated += len(sols)
+        order = np.argsort(costs)
+        if costs[order[0]] < res.best_cost:
+            res.best_cost = float(costs[order[0]])
+            res.best_sol = sols[order[0]]
+            res.best_metrics = _metrics_row(metrics, int(order[0]))
+        res.history.append((time.monotonic() - t0, res.n_evaluated,
+                            res.best_cost))
+        gen += 1
+        if time_budget_s is not None and time.monotonic() - t0 > time_budget_s:
+            break
+        if max_generations is not None and gen >= max_generations:
+            break
+
+        def tournament_pick() -> int:
+            idx = rng.choice(len(sols), size=min(tournament, len(sols)),
+                             replace=False)
+            return int(idx[np.argmin(costs[idx])])
+
+        elite_idx = order[:elitism]
+        new_sols = [sols[i] for i in elite_idx]
+        new_graphs = [graphs[i] for i in elite_idx]
+        while len(new_sols) < population:
+            pa, pb = sols[tournament_pick()], sols[tournament_pick()]
+
+            def op(r, pa=pa, pb=pb):
+                child = ev.rep.merge(pa, pb, r)
+                if r.random() < p_mutation:
+                    child = ev.rep.mutate(child, r)
+                return child
+
+            cs, cg = ev.generate_valid(op, rng, 1)
+            new_sols += cs
+            new_graphs += cg
+        sols, graphs = new_sols, new_graphs
+    res.n_generated = ev.n_generated
+    res.normalizers = ev.norm
+    return res
+
+
+# ---------------------------------------------------------------------------
+# Simulated Annealing (§II-B3; adaptive cooling, DESIGN.md §3).
+#
+# Cooling: after each block of L iterations at temperature T,
+#     T <- alpha * T / (1 + beta * T / sigma_block)
+# with sigma_block the std-dev of costs seen in the block (Aarts & van
+# Laarhoven).  Table III/IV's (T0, L, alpha=1, beta) plug in directly.
+# ``chains`` > 1 runs that many independent chains, evaluated as one batch
+# per step (beyond-paper batching; chains never interact).
+# ---------------------------------------------------------------------------
+
+def simulated_annealing(ev: Evaluator, rng: np.random.Generator, *,
+                        t0_temp: float, block_len: int,
+                        alpha: float = 1.0, beta: float = 5.0,
+                        chains: int = 1,
+                        time_budget_s: float | None = None,
+                        max_iters: int | None = None) -> OptResult:
+    res = OptResult(None, np.inf, {})
+    tstart = time.monotonic()
+    sols, graphs = ev.generate_valid(ev.rep.random, rng, chains)
+    costs, metrics = ev.costs(graphs)
+    res.n_evaluated += chains
+    temps = np.full(chains, float(t0_temp))
+    block_costs: list[np.ndarray] = []
+    i = int(np.argmin(costs))
+    res.best_cost = float(costs[i])
+    res.best_sol = sols[i]
+    res.best_metrics = _metrics_row(metrics, i)
+    it = 0
+    while True:
+        if time_budget_s is not None and \
+                time.monotonic() - tstart > time_budget_s:
+            break
+        if max_iters is not None and it >= max_iters:
+            break
+        nb_sols, nb_graphs = [], []
+        for c in range(chains):
+            s, g = ev.generate_valid(
+                lambda r, c=c: ev.rep.mutate(sols[c], r), rng, 1)
+            nb_sols += s
+            nb_graphs += g
+        nb_costs, nb_metrics = ev.costs(nb_graphs)
+        res.n_evaluated += chains
+        delta = nb_costs - costs
+        accept = (delta < 0) | (rng.random(chains)
+                                < np.exp(-np.maximum(delta, 0)
+                                         / np.maximum(temps, 1e-9)))
+        for c in range(chains):
+            if accept[c]:
+                sols[c], graphs[c], costs[c] = \
+                    nb_sols[c], nb_graphs[c], nb_costs[c]
+        block_costs.append(nb_costs.copy())
+        i = int(np.argmin(nb_costs))
+        if nb_costs[i] < res.best_cost:
+            res.best_cost = float(nb_costs[i])
+            res.best_sol = nb_sols[i]
+            res.best_metrics = _metrics_row(nb_metrics, i)
+        it += 1
+        if it % block_len == 0:
+            blk = np.stack(block_costs)            # [L, chains]
+            sigma = np.maximum(blk.std(axis=0), 1e-6)
+            temps = alpha * temps / (1.0 + beta * temps / sigma)
+            block_costs = []
+        res.history.append((time.monotonic() - tstart, res.n_evaluated,
+                            res.best_cost))
+    res.n_generated = ev.n_generated
+    res.normalizers = ev.norm
+    return res
+
+
+ALGORITHMS = {
+    "br": best_random,
+    "ga": genetic_algorithm,
+    "sa": simulated_annealing,
+}

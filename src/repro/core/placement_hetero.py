@@ -1,0 +1,238 @@
+"""Heterogeneous placement representation (paper §VI-A, Figs. 7-10).
+
+The optimization algorithms do not operate on chiplet coordinates.  They
+operate on the *(order, rotations)* pair that is fed to a deterministic
+corner-placement algorithm; every such pair yields an overlap-free placement.
+
+Isomorphism avoidance (Fig. 8):
+* the order is a sequence of chiplet *types*, not IDs (two different orders
+  by ID can produce the same placement; orders by type cannot);
+* rotations are restricted per type to the non-isomorphic set computed from
+  the chiplet geometry (rotation-invariant -> {0}, rotation-hybrid ->
+  {0, 90}, rotation-sensitive -> all four).
+
+Corner placement (Fig. 7): chiplets are placed one at a time.  Candidate
+anchors are the L-corners formed by already-placed rectangles (bottom-left
+corner-point set); the anchor minimizing the side of the minimum enclosing
+*square* wins (step 3).  Overlap created by the greedy choice is resolved by
+the paper's step-4 rule: overlap to the right pushes the chiplet up; overlap
+above pushes it right.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from .chiplets import COMPUTE, IO, MEMORY, ArchSpec, Chiplet
+from .proxies import Layout
+from .topology import (PlacedPhys, ScoreGraph, build_score_graph,
+                       infer_links_mst)
+
+Sol = tuple[np.ndarray, np.ndarray]  # (order [N] kinds int8, rots [N] int8)
+
+
+def sol_key(sol: Sol) -> bytes:
+    return sol[0].tobytes() + sol[1].tobytes()
+
+
+def _overlap(x, y, w, h, rects) -> int:
+    """Index of the first placed rect overlapping (x,y,w,h), or -1."""
+    if len(rects) == 0:
+        return -1
+    rx, ry, rw, rh = rects[:, 0], rects[:, 1], rects[:, 2], rects[:, 3]
+    ov = (x < rx + rw - 1e-9) & (rx < x + w - 1e-9) & \
+         (y < ry + rh - 1e-9) & (ry < y + h - 1e-9)
+    idx = np.nonzero(ov)[0]
+    return int(idx[0]) if len(idx) else -1
+
+
+def corner_place(dims: list[tuple[float, float]]
+                 ) -> np.ndarray:
+    """Place rectangles in order; returns [N, 2] lower-left positions.
+
+    Deterministic; never produces overlaps.  See module docstring.
+    """
+    n = len(dims)
+    out = np.zeros((n, 2), dtype=np.float64)
+    rects = np.zeros((0, 4), dtype=np.float64)
+    for i, (w, h) in enumerate(dims):
+        if i == 0:
+            out[i] = (0.0, 0.0)
+            rects = np.array([[0.0, 0.0, w, h]])
+            continue
+        # Candidate anchors: right-of and top-of corners of placed rects.
+        cands = [(0.0, 0.0)]
+        for (rx, ry, rw, rh) in rects:
+            cands.append((rx + rw, ry))
+            cands.append((rx, ry + rh))
+        best = None
+        cur_w = float((rects[:, 0] + rects[:, 2]).max())
+        cur_h = float((rects[:, 1] + rects[:, 3]).max())
+        for (cx, cy) in cands:
+            x, y = cx, cy
+            moved_up_last = cx > 0 and any(
+                abs(cx - (r[0] + r[2])) < 1e-9 for r in rects)
+            ok = False
+            for _ in range(4 * n):          # bounded resolution loop
+                j = _overlap(x, y, w, h, rects)
+                if j < 0:
+                    ok = True
+                    break
+                rx, ry, rw, rh = rects[j]
+                # Step 4: overlap on the right -> move to the top of the
+                # blocking rect; overlap on top -> move right.
+                if moved_up_last:
+                    y = ry + rh
+                else:
+                    x = rx + rw
+                moved_up_last = not moved_up_last
+            if not ok:
+                continue
+            side = max(max(cur_w, x + w), max(cur_h, y + h))
+            key = (side, x + y, y, x)
+            if best is None or key < best[0]:
+                best = (key, x, y)
+        assert best is not None
+        _, x, y = best
+        out[i] = (x, y)
+        rects = np.concatenate([rects, [[x, y, w, h]]])
+    return out
+
+
+@dataclass
+class HeteroRep:
+    """Placement representation + operators for heterogeneous chiplet shapes."""
+
+    arch: ArchSpec
+    mutation_mode: str = "any-one"
+
+    def __post_init__(self):
+        self._kind_instances = {
+            k: [i for i, ch in enumerate(self.arch.chiplets) if ch.kind == k]
+            for k in (COMPUTE, MEMORY, IO)
+        }
+        n = len(self.arch.chiplets)
+        self._phy_base = np.zeros(n + 1, dtype=np.int64)
+        for i, ch in enumerate(self.arch.chiplets):
+            self._phy_base[i + 1] = self._phy_base[i] + ch.n_phys()
+        # One prototype chiplet per kind (instances of a kind are identical).
+        self._proto: dict[int, Chiplet] = {
+            k: self.arch.chiplets[ids[0]]
+            for k, ids in self._kind_instances.items() if ids
+        }
+        self._allowed_rot = {k: ch.allowed_rotations()
+                             for k, ch in self._proto.items()}
+
+    @property
+    def layout(self) -> Layout:
+        return Layout(Vp=int(self._phy_base[-1]), kinds=self.arch.kinds())
+
+    @property
+    def e_max(self) -> int:
+        return 2 * int(self._phy_base[-1])
+
+    # -- representation functions ------------------------------------------
+    def random(self, rng: np.random.Generator) -> Sol:
+        order = np.array([k for k, ids in self._kind_instances.items()
+                          for _ in ids], dtype=np.int8)
+        rng.shuffle(order)
+        rots = np.array([rng.choice(self._allowed_rot[int(k)])
+                         for k in order], dtype=np.int8)
+        return order, rots
+
+    def mutate(self, sol: Sol, rng: np.random.Generator) -> Sol:
+        order = sol[0].copy()
+        rots = sol[1].copy()
+        both = self.mutation_mode.endswith("both")
+        do_swap = both or bool(rng.integers(2))
+        do_rot = both or not do_swap
+        if do_swap:
+            for _ in range(100):
+                i, j = rng.integers(len(order), size=2)
+                if order[i] != order[j]:
+                    order[i], order[j] = order[j], order[i]
+                    rots[i], rots[j] = rots[j], rots[i]
+                    for p in (i, j):
+                        if rots[p] not in self._allowed_rot[int(order[p])]:
+                            rots[p] = rng.choice(
+                                self._allowed_rot[int(order[p])])
+                    break
+        if do_rot:
+            cand = [i for i in range(len(order))
+                    if len(self._allowed_rot[int(order[i])]) > 1]
+            if cand:
+                i = cand[int(rng.integers(len(cand)))]
+                rots[i] = rng.choice(self._allowed_rot[int(order[i])])
+        return order, rots
+
+    def merge(self, a: Sol, b: Sol, rng: np.random.Generator) -> Sol:
+        """Fig. 10: carry over matching types/rotations, randomize the rest."""
+        oa, ra = a
+        ob, rb = b
+        n = len(oa)
+        order = np.full(n, -1, dtype=np.int8)
+        match = oa == ob
+        order[match] = oa[match]
+        remaining = {k: len(ids) for k, ids in self._kind_instances.items()}
+        for k in remaining:
+            remaining[k] -= int((order == k).sum())
+        fill = [k for k, cnt in remaining.items() for _ in range(cnt)]
+        fill = np.array(fill, dtype=np.int8)
+        rng.shuffle(fill)
+        order[order == -1] = fill
+        rots = np.zeros(n, dtype=np.int8)
+        rmatch = match & (ra == rb)
+        rots[rmatch] = ra[rmatch]
+        for i in range(n):
+            if not rmatch[i] or rots[i] not in self._allowed_rot[int(order[i])]:
+                rots[i] = rng.choice(self._allowed_rot[int(order[i])])
+        return order, rots
+
+    # -- geometry / network --------------------------------------------------
+    def place(self, sol: Sol) -> tuple[np.ndarray, list[Chiplet], np.ndarray]:
+        """Run the corner-placement algorithm.
+
+        Returns (positions [N,2] in *order* order, rotated chiplets, instance
+        ids per order position).
+        """
+        order, rots = sol
+        chips = [self._proto[int(k)].rotated(int(r))
+                 for k, r in zip(order, rots)]
+        pos = corner_place([(c.w, c.h) for c in chips])
+        counters = {k: 0 for k in self._kind_instances}
+        inst = np.zeros(len(order), dtype=np.int64)
+        for p, k in enumerate(order):
+            inst[p] = self._kind_instances[int(k)][counters[int(k)]]
+            counters[int(k)] += 1
+        return pos, chips, inst
+
+    def geometry(self, sol: Sol) -> PlacedPhys:
+        pos, chips, inst = self.place(sol)
+        Vp = int(self._phy_base[-1])
+        ppos = np.zeros((Vp, 2), dtype=np.float32)
+        owner = np.zeros(Vp, dtype=np.int32)
+        for i, ch in enumerate(self.arch.chiplets):
+            owner[self._phy_base[i]:self._phy_base[i + 1]] = i
+        for p, ch in enumerate(chips):
+            i = int(inst[p])
+            for li, (x, y) in enumerate(ch.phys):
+                ppos[self._phy_base[i] + li] = (pos[p, 0] + x, pos[p, 1] + y)
+        # get_area: minimal enclosing rectangle (§VI-A).
+        xs = np.array([pos[p, 0] + chips[p].w for p in range(len(chips))])
+        ys = np.array([pos[p, 1] + chips[p].h for p in range(len(chips))])
+        area = float(xs.max() * ys.max())
+        relay = np.array([ch.relay for ch in self.arch.chiplets])
+        kinds = np.array(self.arch.kinds(), dtype=np.int8)
+        return PlacedPhys(pos=ppos, owner=owner, relay=relay, kinds=kinds,
+                          area=area)
+
+    def score_graph(self, sol: Sol) -> ScoreGraph:
+        geo = self.geometry(sol)
+        links, connected = infer_links_mst(self.arch, geo)
+        return build_score_graph(self.arch, geo, links, self.e_max, connected)
+
+    def is_connected(self, sol: Sol) -> bool:
+        geo = self.geometry(sol)
+        _, connected = infer_links_mst(self.arch, geo)
+        return connected

@@ -1,0 +1,192 @@
+"""Latency / throughput proxies (paper §IV-A, RapidChiplet-style), in JAX.
+
+Given a batch of ``ScoreGraph``s we compute, per placement and per traffic
+type t in {C2C, C2M, C2I, M2I} (directed: C->C, C->M, C->I, M->I):
+
+* ``lat_t``  — mean shortest-path latency [cycles] over (src, dst) chiplet
+  pairs of the type, on the PHY-level graph (relay semantics encoded in the
+  graph construction, see ``topology.py``).
+* ``thr_t``  — sustainable per-source injection rate (fraction of theoretical
+  peak, in [0, 1]): uniform-random traffic of the type is routed over all
+  shortest paths with ECMP splitting (Brandes path-counting); the bottleneck
+  link determines the saturation rate  alpha* = 1 / max_link_load.
+
+The whole computation is expressed as a batched Floyd-Warshall with
+shortest-path *counting* — each iteration is a rank-1 min-plus update — so it
+vmaps over placements and runs on TPU.  A blocked variant whose inner update
+is a Pallas min-plus matmul kernel can be swapped in via ``fw_impl`` (see
+``repro.kernels``): this is the evaluation hot spot that dominates PlaceIT's
+runtime (paper Table V).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .chiplets import COMPUTE, IO, MEMORY, TRAFFIC_TYPES, ArchSpec
+
+INF_CUT = 1.0e8   # entries >= this are treated as "unreachable"
+_COUNT_CLIP = 1.0e30
+
+
+@dataclass(frozen=True)
+class Layout:
+    """Static (arch-level) node layout shared by every placement in a batch."""
+
+    Vp: int
+    kinds: tuple[int, ...]    # chiplet kind per instance
+
+    @property
+    def N(self) -> int:
+        return len(self.kinds)
+
+    def src_nodes(self, kind: int) -> np.ndarray:
+        base = self.Vp
+        return np.array([base + c for c, k in enumerate(self.kinds)
+                         if k == kind], dtype=np.int32)
+
+    def dst_nodes(self, kind: int) -> np.ndarray:
+        base = self.Vp + self.N
+        return np.array([base + c for c, k in enumerate(self.kinds)
+                         if k == kind], dtype=np.int32)
+
+
+def layout_for(arch: ArchSpec) -> Layout:
+    Vp = sum(ch.n_phys() for ch in arch.chiplets)
+    return Layout(Vp=Vp, kinds=arch.kinds())
+
+
+# ---------------------------------------------------------------------------
+# Floyd-Warshall with shortest-path counting (reference implementation).
+# ---------------------------------------------------------------------------
+
+def fw_counts_ref(W: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """All-pairs shortest paths + path counts.  W: [..., V, V] with 0 diag.
+
+    Returns (D, Ncnt) of the same shape.  Correctness of the counting relies
+    on every shortest path being decomposed uniquely at its highest-indexed
+    intermediate vertex; rows/columns k are masked each iteration to avoid
+    self-contributions through D[k, k] = 0.
+    """
+    V = W.shape[-1]
+    D0 = W
+    off = ~jnp.eye(V, dtype=bool)
+    N0 = jnp.where((W < INF_CUT) & off, 1.0, 0.0) + jnp.eye(V, dtype=W.dtype)
+
+    def body(k, carry):
+        D, Ncnt = carry
+        dik = jax.lax.dynamic_slice_in_dim(D, k, 1, axis=-1)      # [..., V, 1]
+        dkj = jax.lax.dynamic_slice_in_dim(D, k, 1, axis=-2)      # [..., 1, V]
+        nik = jax.lax.dynamic_slice_in_dim(Ncnt, k, 1, axis=-1)
+        nkj = jax.lax.dynamic_slice_in_dim(Ncnt, k, 1, axis=-2)
+        cand = dik + dkj
+        ncand = jnp.minimum(nik * nkj, _COUNT_CLIP)
+        notk = jnp.arange(V) != k
+        mask = notk[:, None] & notk[None, :]
+        lt = (cand < D) & mask
+        eq = (cand == D) & mask & (cand < INF_CUT)
+        D = jnp.where(lt, cand, D)
+        Ncnt = jnp.where(lt, ncand, Ncnt + jnp.where(eq, ncand, 0.0))
+        Ncnt = jnp.minimum(Ncnt, _COUNT_CLIP)
+        return D, Ncnt
+
+    return jax.lax.fori_loop(0, V, body, (D0, N0))
+
+
+# ---------------------------------------------------------------------------
+# Per-placement metric computation.
+# ---------------------------------------------------------------------------
+
+def _type_pairs(layout: Layout) -> dict:
+    """Static (srcs, dsts, same_kind) node-index sets per traffic type."""
+    ep = {
+        "c2c": (COMPUTE, COMPUTE),
+        "c2m": (COMPUTE, MEMORY),
+        "c2i": (COMPUTE, IO),
+        "m2i": (MEMORY, IO),
+    }
+    out = {}
+    for t, (ks, kd) in ep.items():
+        out[t] = (layout.src_nodes(ks), layout.dst_nodes(kd), ks == kd)
+    return out
+
+
+def _metrics_one(W, edges, edge_mask, area, *, pairs, fw_impl):
+    """All nine cost components for a single placement (jit/vmap-able)."""
+    D, Ncnt = fw_impl(W)
+    eu, ev = edges[:, 0], edges[:, 1]
+    w_e = W[eu, ev]
+    out = {"area": area}
+    for t, (srcs, dsts, same) in pairs.items():
+        srcs = jnp.asarray(srcs)
+        dsts = jnp.asarray(dsts)
+        Dsd = D[srcs][:, dsts]                                   # [S, T]
+        S, T = Dsd.shape
+        if same:
+            # Exclude the self pair (src chiplet == dst chiplet).  The node
+            # sets enumerate the same chiplets in the same order.
+            pair_ok = ~jnp.eye(S, dtype=bool)
+        else:
+            pair_ok = jnp.ones((S, T), dtype=bool)
+        n_pairs = pair_ok.sum()
+        lat = jnp.where(pair_ok, Dsd, 0.0).sum() / jnp.maximum(n_pairs, 1)
+        # --- ECMP link loads (Brandes fractions) -------------------------
+        dem = pair_ok.astype(W.dtype) / jnp.maximum(
+            pair_ok.sum(axis=1, keepdims=True), 1)               # [S, T]
+        Dsu = D[srcs][:, eu]                                     # [S, E]
+        Dvd = D[ev][:, dsts]                                     # [E, T]
+        Nsu = Ncnt[srcs][:, eu]
+        Nvd = Ncnt[ev][:, dsts]
+        Nsd = jnp.maximum(Ncnt[srcs][:, dsts], 1.0)
+        on_sp = (
+            jnp.abs(Dsu[:, :, None] + w_e[None, :, None] + Dvd[None, :, :]
+                    - Dsd[:, None, :]) < 0.5
+        ) & (Dsd[:, None, :] < INF_CUT)
+        frac = Nsu[:, :, None] * Nvd[None, :, :] / Nsd[:, None, :]
+        load = jnp.einsum("st,set->e",
+                          dem, jnp.where(on_sp, frac, 0.0))
+        load = jnp.where(edge_mask, load, 0.0)
+        max_load = load.max()
+        thr = jnp.where(max_load > 0, jnp.minimum(1.0, 1.0 / max_load), 1.0)
+        out[f"lat_{t}"] = lat
+        out[f"thr_{t}"] = thr
+    return out
+
+
+def make_scorer(layout: Layout, *, fw_impl=fw_counts_ref, chunk: int = 16):
+    """Build a jitted batched scorer: dict of stacked arrays -> metric dict.
+
+    Placements are scored in chunks of ``chunk`` via ``lax.map`` to bound
+    memory; within a chunk, everything is vmapped.
+    """
+    pairs = _type_pairs(layout)
+    one = functools.partial(_metrics_one, pairs=pairs, fw_impl=fw_impl)
+
+    @jax.jit
+    def score(batch):
+        P = batch["W"].shape[0]
+        pad = (-P) % chunk
+        padded = {k: jnp.concatenate([v, jnp.repeat(v[:1], pad, axis=0)])
+                  if pad else v for k, v in batch.items()}
+
+        def score_chunk(c):
+            return jax.vmap(lambda w, e, m, a: one(w, e, m, a))(
+                c["W"], c["edges"], c["edge_mask"], c["area"])
+
+        chunked = {k: v.reshape((-1, chunk) + v.shape[1:])
+                   for k, v in padded.items()}
+        res = jax.lax.map(score_chunk, chunked)
+        return {k: v.reshape(-1)[:P] for k, v in res.items()}
+
+    return score
+
+
+METRIC_KEYS = tuple(
+    [f"lat_{t}" for t in TRAFFIC_TYPES]
+    + [f"thr_{t}" for t in TRAFFIC_TYPES]
+    + ["area"]
+)

@@ -1,0 +1,162 @@
+"""Pallas TPU kernels for min-plus / APSP — PlaceIT's scoring hot spot.
+
+PlaceIT evaluates thousands of placements; every evaluation runs an
+all-pairs-shortest-path with path *counting* over the PHY-level latency
+graph (V = #PHYs + 2*#chiplets, a few hundred nodes).  On TPU the XLA
+`fori_loop` formulation round-trips the (V, V) distance and count matrices
+through HBM on every one of the V rank-1 relaxation steps.  Both kernels
+below keep the working set VMEM-resident instead:
+
+* ``fw_counts_pallas`` — batched whole-matrix Floyd-Warshall **with path
+  counts**: one grid program per placement, (V, V) D and N matrices live in
+  VMEM for the entire V-step relaxation.  This is the kernel the scorer
+  uses (exact same math as ``ref.fw_counts_ref``).  V is padded to a
+  multiple of 128 (lane width) with isolated nodes.
+
+* ``minplus_tiled_pallas`` — blocked tropical matmul (distances only) for
+  graphs too large for a VMEM-resident FW; the classic (i, j, k) tiling
+  with an accumulate-min inner loop.  Used for beyond-paper-scale APSP via
+  repeated squaring.
+
+Hardware note (DESIGN.md §3): (min, +) has no MXU mapping — these are VPU
+kernels; tiles are (8k, 128)-aligned.  On CPU both run via interpret=True.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+import jax.experimental.pallas.tpu as pltpu
+
+INF_CUT = 1.0e8
+_COUNT_CLIP = 1.0e30
+
+
+# ---------------------------------------------------------------------------
+# Batched VMEM-resident Floyd-Warshall with path counts.
+# ---------------------------------------------------------------------------
+
+def _fw_counts_kernel(w_ref, d_ref, n_ref, *, V: int):
+    W = w_ref[0]                                   # (V, V) fp32 in VMEM
+    row = jax.lax.broadcasted_iota(jnp.int32, (V, V), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (V, V), 1)
+    eye = (row == col)
+    N0 = jnp.where((W < INF_CUT) & ~eye, 1.0, 0.0) + eye.astype(W.dtype)
+
+    def body(k, carry):
+        D, N = carry
+        dik = jax.lax.dynamic_slice(D, (0, k), (V, 1))     # column k
+        dkj = jax.lax.dynamic_slice(D, (k, 0), (1, V))     # row k
+        nik = jax.lax.dynamic_slice(N, (0, k), (V, 1))
+        nkj = jax.lax.dynamic_slice(N, (k, 0), (1, V))
+        cand = dik + dkj
+        ncand = jnp.minimum(nik * nkj, _COUNT_CLIP)
+        notk = (row != k) & (col != k)
+        lt = (cand < D) & notk
+        eq = (cand == D) & notk & (cand < INF_CUT)
+        D = jnp.where(lt, cand, D)
+        N = jnp.where(lt, ncand, N + jnp.where(eq, ncand, 0.0))
+        N = jnp.minimum(N, _COUNT_CLIP)
+        return D, N
+
+    D, N = jax.lax.fori_loop(0, V, body, (W, N0))
+    d_ref[0] = D
+    n_ref[0] = N
+
+
+def fw_counts_pallas(W: jnp.ndarray, *, interpret: bool = True
+                     ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Batched FW + counts.  W: [B, V, V] float32, V % 128 == 0 preferred.
+
+    Pads V up to a multiple of 128 with isolated nodes (diag 0, else INF);
+    padded rows/cols do not interact with real nodes.
+    """
+    squeeze = W.ndim == 2
+    if squeeze:
+        W = W[None]
+    B, V0, _ = W.shape
+    Vp = max(128, -(-V0 // 128) * 128)
+    if Vp != V0:
+        pad = jnp.full((B, Vp, Vp), 1e9, dtype=W.dtype)
+        pad = pad.at[:, :V0, :V0].set(W)
+        idx = jnp.arange(V0, Vp)
+        pad = pad.at[:, idx, idx].set(0.0)
+        W = pad
+    kern = functools.partial(_fw_counts_kernel, V=Vp)
+    D, N = pl.pallas_call(
+        kern,
+        grid=(B,),
+        in_specs=[pl.BlockSpec((1, Vp, Vp), lambda b: (b, 0, 0))],
+        out_specs=[pl.BlockSpec((1, Vp, Vp), lambda b: (b, 0, 0)),
+                   pl.BlockSpec((1, Vp, Vp), lambda b: (b, 0, 0))],
+        out_shape=[jax.ShapeDtypeStruct((B, Vp, Vp), W.dtype),
+                   jax.ShapeDtypeStruct((B, Vp, Vp), W.dtype)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(W)
+    D, N = D[:, :V0, :V0], N[:, :V0, :V0]
+    if squeeze:
+        D, N = D[0], N[0]
+    return D, N
+
+
+# ---------------------------------------------------------------------------
+# Tiled min-plus matmul (distances only) for large V.
+# ---------------------------------------------------------------------------
+
+def _minplus_kernel(a_ref, b_ref, o_ref, *, bk: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.full_like(o_ref, 1e9)
+
+    a = a_ref[...]                                  # (bm, bk)
+    b = b_ref[...]                                  # (bk, bn)
+
+    def body(t, acc):
+        # Rank-1 (min, +) update: keeps the working set at (bm, bn).
+        return jnp.minimum(acc, a[:, t][:, None] + b[t, :][None, :])
+
+    o_ref[...] = jax.lax.fori_loop(0, bk, body, o_ref[...])
+
+
+def minplus_tiled_pallas(A: jnp.ndarray, B: jnp.ndarray, *,
+                         bm: int = 128, bn: int = 128, bk: int = 128,
+                         interpret: bool = True) -> jnp.ndarray:
+    """Tropical matmul out[i,j] = min_k A[i,k] + B[k,j], tiled for VMEM.
+
+    A: [M, K], B: [K, N]; M, N, K padded to tile multiples with +INF
+    (identity of min) — padding never wins the min.
+    """
+    M, K = A.shape
+    K2, N = B.shape
+    assert K == K2
+    Mp, Kp, Np = (-(-M // bm) * bm, -(-K // bk) * bk, -(-N // bn) * bn)
+    Ap = jnp.full((Mp, Kp), 1e9, A.dtype).at[:M, :K].set(A)
+    Bp = jnp.full((Kp, Np), 1e9, B.dtype).at[:K, :N].set(B)
+    out = pl.pallas_call(
+        functools.partial(_minplus_kernel, bk=bk),
+        grid=(Mp // bm, Np // bn, Kp // bk),
+        in_specs=[pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+                  pl.BlockSpec((bk, bn), lambda i, j, k: (k, j))],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), A.dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(Ap, Bp)
+    return out[:M, :N]
+
+
+def apsp_tiled_pallas(W: jnp.ndarray, *, interpret: bool = True,
+                      **tile_kw) -> jnp.ndarray:
+    """APSP by repeated tiled min-plus squaring (distances only)."""
+    V = W.shape[-1]
+    D = W
+    n_iter = max(1, int(jnp.ceil(jnp.log2(max(V - 1, 2)))))
+    for _ in range(n_iter):
+        D = jnp.minimum(D, minplus_tiled_pallas(D, D, interpret=interpret,
+                                                **tile_kw))
+    return D

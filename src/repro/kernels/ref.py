@@ -1,0 +1,200 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth in tests).
+
+Each function here is the semantic specification; the Pallas kernels in this
+package must match them to ``assert_allclose`` tolerance across the shape /
+dtype sweeps in ``tests/test_kernels_*.py``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+INF_CUT = 1.0e8
+_COUNT_CLIP = 1.0e30
+
+
+# ---------------------------------------------------------------------------
+# Min-plus / APSP (PlaceIT scoring hot spot).
+# ---------------------------------------------------------------------------
+
+def minplus_ref(A: jnp.ndarray, B: jnp.ndarray) -> jnp.ndarray:
+    """Tropical (min, +) matrix product: out[i,j] = min_k A[i,k] + B[k,j]."""
+    return jnp.min(A[..., :, :, None] + B[..., None, :, :], axis=-2)
+
+
+def apsp_ref(W: jnp.ndarray) -> jnp.ndarray:
+    """All-pairs shortest path distances by repeated min-plus squaring."""
+    V = W.shape[-1]
+    D = W
+    n = max(1, int(jnp.ceil(jnp.log2(jnp.maximum(V - 1, 2)))))
+    for _ in range(n):
+        D = jnp.minimum(D, minplus_ref(D, D))
+    return D
+
+
+def fw_counts_ref(W: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Floyd-Warshall distances + shortest-path counts.  W: [..., V, V].
+
+    Identical math to ``repro.core.proxies.fw_counts_ref`` (re-exported there)
+    — kept here as the kernel oracle.
+    """
+    V = W.shape[-1]
+    D0 = W
+    off = ~jnp.eye(V, dtype=bool)
+    N0 = jnp.where((W < INF_CUT) & off, 1.0, 0.0) + jnp.eye(V, dtype=W.dtype)
+
+    def body(k, carry):
+        D, Ncnt = carry
+        dik = jax.lax.dynamic_slice_in_dim(D, k, 1, axis=-1)
+        dkj = jax.lax.dynamic_slice_in_dim(D, k, 1, axis=-2)
+        nik = jax.lax.dynamic_slice_in_dim(Ncnt, k, 1, axis=-1)
+        nkj = jax.lax.dynamic_slice_in_dim(Ncnt, k, 1, axis=-2)
+        cand = dik + dkj
+        ncand = jnp.minimum(nik * nkj, _COUNT_CLIP)
+        notk = jnp.arange(V) != k
+        mask = notk[:, None] & notk[None, :]
+        lt = (cand < D) & mask
+        eq = (cand == D) & mask & (cand < INF_CUT)
+        D = jnp.where(lt, cand, D)
+        Ncnt = jnp.where(lt, ncand, Ncnt + jnp.where(eq, ncand, 0.0))
+        Ncnt = jnp.minimum(Ncnt, _COUNT_CLIP)
+        return D, Ncnt
+
+    return jax.lax.fori_loop(0, V, body, (D0, N0))
+
+
+# ---------------------------------------------------------------------------
+# Attention (training / prefill).
+# ---------------------------------------------------------------------------
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                  causal: bool = True, window: int | None = None,
+                  scale: float | None = None,
+                  softcap: float | None = None,
+                  pos_offset=None) -> jnp.ndarray:
+    """GQA attention oracle.
+
+    q: [B, Sq, Hq, d]; k, v: [B, Sk, Hkv, d] with Hq % Hkv == 0.
+    ``window``: sliding-window size (attend to keys in (i-window, i]).
+    ``pos_offset``: absolute position of query 0 (may be traced); defaults
+    to end-alignment (Sk - Sq), supporting Sq != Sk (decode/prefill chunks).
+    """
+    B, Sq, Hq, d = q.shape
+    _, Sk, Hkv, _ = k.shape
+    assert Hq % Hkv == 0
+    g = Hq // Hkv
+    scale = (d ** -0.5) if scale is None else scale
+    qh = q.reshape(B, Sq, Hkv, g, d)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qh.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    if pos_offset is None:
+        pos_offset = Sk - Sq
+    qpos = jnp.arange(Sq) + pos_offset
+    kpos = jnp.arange(Sk)
+    mask = jnp.ones((Sq, Sk), dtype=bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    logits = jnp.where(mask[None, None, None], logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)  # fully-masked rows -> zero output
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return out.reshape(B, Sq, Hq, d).astype(q.dtype)
+
+
+def decode_attention_ref(q: jnp.ndarray, k_cache: jnp.ndarray,
+                         v_cache: jnp.ndarray, lengths: jnp.ndarray, *,
+                         scale: float | None = None,
+                         window: int | None = None,
+                         softcap: float | None = None) -> jnp.ndarray:
+    """Single-token GQA decode oracle.
+
+    q: [B, Hq, d]; caches: [B, S, Hkv, d]; lengths: [B] valid prefix length
+    (the new token's position is lengths-1, already written to the cache).
+    """
+    B, Hq, d = q.shape
+    _, S, Hkv, _ = k_cache.shape
+    g = Hq // Hkv
+    scale = (d ** -0.5) if scale is None else scale
+    qh = q.reshape(B, Hkv, g, d)
+    logits = jnp.einsum("bhgd,bkhd->bhgk", qh.astype(jnp.float32),
+                        k_cache.astype(jnp.float32)) * scale
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+    kpos = jnp.arange(S)[None]                       # [1, S]
+    mask = kpos < lengths[:, None]
+    if window is not None:
+        mask &= kpos > (lengths[:, None] - 1 - window)
+    logits = jnp.where(mask[:, None, None], logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, Hq, d).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Mamba-1 selective scan.
+# ---------------------------------------------------------------------------
+
+def selective_scan_ref(x: jnp.ndarray, dt: jnp.ndarray, A: jnp.ndarray,
+                       B: jnp.ndarray, C: jnp.ndarray, D: jnp.ndarray,
+                       h0: jnp.ndarray | None = None
+                       ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Sequential selective-scan oracle (Mamba-1, diagonal A).
+
+    x, dt: [Bt, S, Di]; A: [Di, N]; B, C: [Bt, S, N]; D: [Di].
+    Discretization (ZOH on A, Euler on B, as in the Mamba paper):
+        h_t = exp(dt_t * A) * h_{t-1} + (dt_t * x_t) B_t
+        y_t = (h_t C_t).sum(N) + D * x_t
+    Returns (y [Bt, S, Di], h_final [Bt, Di, N]).
+    """
+    Bt, S, Di = x.shape
+    N = A.shape[-1]
+    if h0 is None:
+        h0 = jnp.zeros((Bt, Di, N), dtype=jnp.float32)
+
+    def step(h, inp):
+        xt, dtt, Bt_, Ct = inp                     # [Bt,Di],[Bt,Di],[Bt,N],[Bt,N]
+        dA = jnp.exp(dtt[..., None] * A[None])     # [Bt, Di, N]
+        dBx = (dtt * xt)[..., None] * Bt_[:, None, :]
+        h = dA * h + dBx
+        y = jnp.einsum("bdn,bn->bd", h, Ct) + D[None] * xt
+        return h, y
+
+    xs = (jnp.moveaxis(x, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(dt, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(B, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(C, 1, 0).astype(jnp.float32))
+    h, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), h
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU (recurrentgemma / Griffin).
+# ---------------------------------------------------------------------------
+
+def rglru_ref(x: jnp.ndarray, a: jnp.ndarray,
+              h0: jnp.ndarray | None = None
+              ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Diagonal linear recurrence oracle: h_t = a_t * h_{t-1} + b_t where
+    b_t = sqrt(1 - a_t^2) * x_t  (the RG-LRU input normalization).
+
+    x, a: [B, S, D] (a in (0, 1)).  Returns (h [B, S, D], h_final [B, D]).
+    """
+    if h0 is None:
+        h0 = jnp.zeros(x.shape[:1] + x.shape[2:], dtype=jnp.float32)
+    b = jnp.sqrt(jnp.maximum(1.0 - a.astype(jnp.float32) ** 2, 0.0)) \
+        * x.astype(jnp.float32)
+
+    def step(h, inp):
+        at, bt = inp
+        h = at * h + bt
+        return h, h
+
+    hf, hs = jax.lax.scan(
+        step, h0, (jnp.moveaxis(a.astype(jnp.float32), 1, 0),
+                   jnp.moveaxis(b, 1, 0)))
+    return jnp.moveaxis(hs, 0, 1).astype(x.dtype), hf

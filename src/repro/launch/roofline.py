@@ -1,0 +1,162 @@
+"""Roofline analysis from dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch × shape) cell on the single-pod mesh, the three roofline terms on
+TPU v5e (task constants):
+
+    compute    = HLO_FLOPs_per_chip   / 197e12  FLOP/s (bf16)
+    memory     = HLO_bytes_per_chip   / 819e9   B/s (HBM)
+    collective = wire_bytes_per_chip  / 50e9    B/s (per ICI link)
+
+HLO_FLOPs/bytes come from the while-aware analyzer (``hlo_cost``) over the
+compiled module — they are per-chip quantities (the module is the SPMD
+per-device program).  ``MODEL_FLOPS`` is the useful-work floor:
+6·N·D for dense training, 6·N_active·D for MoE, and the fwd-only variants
+(2·N·D) for prefill; decode uses 2·N_active per token.  The ratio
+MODEL_FLOPS / HLO_FLOPs exposes remat/replication/padding waste.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from ..configs import SHAPES, get_config
+
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per v5e chip
+HBM_BW = 819e9               # B/s per chip
+LINK_BW = 50e9               # B/s per ICI link
+DCI_BW = 12.5e9              # B/s per chip across pods (assumption, DESIGN)
+
+ARTIFACT_DIR = os.path.join("artifacts", "dryrun")
+
+
+def active_params(arch: str) -> int:
+    """Parameters touched per token (MoE: top_k of n_experts)."""
+    import functools
+
+    import jax
+
+    from ..models.model import init_params
+
+    cfg = get_config(arch)
+    shapes = jax.eval_shape(
+        functools.partial(init_params, cfg), jax.random.PRNGKey(0))
+    total = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(shapes)[0]:
+        keys = [str(e.key) for e in path
+                if isinstance(e, jax.tree_util.DictKey)]
+        n = leaf.size
+        if any(k in ("we1", "we2", "we3") for k in keys) and cfg.n_experts:
+            n = n * cfg.top_k // cfg.n_experts
+        total += n
+    return int(total)
+
+
+def model_flops(arch: str, shape: str) -> float:
+    """Useful-work floor for the cell (global, not per-chip)."""
+    cfg = get_config(arch)
+    sh = SHAPES[shape]
+    n_act = active_params(arch)
+    tokens = sh.global_batch * sh.seq_len
+    if sh.kind == "train":
+        return 6.0 * n_act * tokens
+    if sh.kind == "prefill":
+        return 2.0 * n_act * tokens
+    # decode: one token per sequence
+    return 2.0 * n_act * sh.global_batch
+
+
+def load_cells(mesh: str = "single", out_dir: str = ARTIFACT_DIR
+               ) -> list[dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(out_dir, f"*__{mesh}.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def roofline_row(rec: dict) -> dict:
+    n_chips = rec["n_chips"]
+    t_comp = rec["flops_total"] / PEAK_FLOPS
+    # TPU-native bytes: the CPU backend materializes bf16<->f32 converts
+    # around every dot (no native bf16 matmul); on the MXU those fuse away.
+    # Both raw and corrected are recorded; terms use the corrected value.
+    bytes_tpu = (rec["bytes_accessed_total"]
+                 - rec.get("convert_bytes_total", 0.0))
+    t_mem = bytes_tpu / HBM_BW
+    wire = rec["collectives"]["wire_bytes_per_chip"]
+    cross = rec["collectives"].get("cross_pod_bytes_per_chip", 0.0)
+    t_coll = (wire - cross) / LINK_BW + cross / DCI_BW
+    dominant = max((t_comp, "compute"), (t_mem, "memory"),
+                   (t_coll, "collective"))[1]
+    mf = model_flops(rec["arch"], rec["shape"]) / n_chips
+    ratio = mf / max(rec["flops_total"], 1.0)
+    # roofline fraction: useful work vs what the dominant term costs
+    t_dom = max(t_comp, t_mem, t_coll)
+    frac = (mf / PEAK_FLOPS) / max(t_dom, 1e-30)
+    mem = rec.get("memory_analysis", {})
+    hbm_gb = (mem.get("argument_size_in_bytes", 0)
+              + mem.get("temp_size_in_bytes", 0)
+              + mem.get("output_size_in_bytes", 0)
+              - mem.get("alias_size_in_bytes", 0)) / 1e9
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "t_compute_s": t_comp, "t_memory_s": t_mem, "t_collective_s": t_coll,
+        "t_memory_cpu_raw_s": rec["bytes_accessed_total"] / HBM_BW,
+        "dominant": dominant,
+        "model_flops_per_chip": mf,
+        "hlo_flops_per_chip": rec["flops_total"],
+        "useful_ratio": ratio,
+        "roofline_fraction": min(frac, 1.0),
+        "hbm_gb_per_chip": hbm_gb,
+        "fits_16gb": hbm_gb <= 16.0,
+    }
+
+
+def report(mesh: str = "single", out_dir: str = ARTIFACT_DIR) -> list[dict]:
+    rows = []
+    for rec in load_cells(mesh, out_dir):
+        if not rec.get("ok"):
+            rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                         "mesh": rec["mesh"], "error": rec.get("error")})
+            continue
+        rows.append(roofline_row(rec))
+    return rows
+
+
+def format_table(rows: list[dict]) -> str:
+    hdr = (f"{'arch':22s} {'shape':12s} {'t_comp':>9s} {'t_mem':>9s} "
+           f"{'t_coll':>9s} {'dom':>10s} {'MF/HLO':>7s} {'roofl%':>7s} "
+           f"{'HBM_GB':>7s} fits")
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        if "error" in r:
+            lines.append(f"{r['arch']:22s} {r['shape']:12s} ERROR: "
+                         f"{str(r['error'])[:60]}")
+            continue
+        lines.append(
+            f"{r['arch']:22s} {r['shape']:12s} "
+            f"{r['t_compute_s']:9.2e} {r['t_memory_s']:9.2e} "
+            f"{r['t_collective_s']:9.2e} {r['dominant']:>10s} "
+            f"{r['useful_ratio']:7.3f} {100*r['roofline_fraction']:6.1f}% "
+            f"{r['hbm_gb_per_chip']:7.2f} "
+            f"{'Y' if r['fits_16gb'] else 'N'}")
+    return "\n".join(lines)
+
+
+def main():
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--out", default=ARTIFACT_DIR)
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args()
+    rows = report(args.mesh, args.out)
+    print(format_table(rows))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(rows, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

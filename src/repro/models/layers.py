@@ -1,0 +1,290 @@
+"""Shared layer primitives: norms, RoPE, GQA attention, SwiGLU MLP.
+
+Parameters are plain nested dicts of jnp arrays — the whole framework is
+pure-function JAX (init / apply), which keeps pjit sharding rules a simple
+path-pattern table (``repro.sharding.rules``).
+
+Activation sharding: blocks call ``shard(x, axes...)`` which applies
+``with_sharding_constraint`` when a mesh context is installed (see
+``repro.sharding.partition.activation_shardings``) and is a no-op otherwise,
+so the same model code runs single-device and under pjit.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ops
+from ..sharding.partition import shard
+from .config import LMConfig
+
+
+def _dt(cfg: LMConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: float | None = None):
+    scale = (d_in ** -0.5) if scale is None else scale
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale
+            ).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, w, eps: float):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * (1.0 + w.astype(jnp.float32))
+            ).astype(x.dtype)
+
+
+def rms_norm_init(d: int):
+    # Stored as an offset from 1.0 (gemma convention) — zero init.
+    return jnp.zeros((d,), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope(x: jnp.ndarray, pos: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: [B, S, H, d]; pos: [B, S] int32 absolute positions."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = pos[..., None].astype(jnp.float32) * freq          # [B, S, half]
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention block (pre-norm residual)
+# ---------------------------------------------------------------------------
+
+def attn_init(key, cfg: LMConfig) -> dict:
+    ks = jax.random.split(key, 5)
+    D, H, Hkv, hd = cfg.d_model, cfg.n_heads_p, cfg.n_kv_heads, cfg.hd
+    dt = _dt(cfg)
+    wq = dense_init(ks[0], D, H * hd, dt)
+    wo = dense_init(ks[3], H * hd, D, dt)
+    if H > cfg.n_heads:          # zero the padded heads (function-exact)
+        real = cfg.n_heads * hd
+        wq = wq.at[:, real:].set(0)
+        wo = wo.at[real:, :].set(0)
+    p = {
+        "norm": rms_norm_init(D),
+        "wq": wq,
+        "wk": dense_init(ks[1], D, Hkv * hd, dt),
+        "wv": dense_init(ks[2], D, Hkv * hd, dt),
+        "wo": wo,
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), dt)
+        p["bk"] = jnp.zeros((Hkv * hd,), dt)
+        p["bv"] = jnp.zeros((Hkv * hd,), dt)
+    if cfg.qk_norm:
+        p["q_norm"] = rms_norm_init(hd)
+        p["k_norm"] = rms_norm_init(hd)
+    return p
+
+
+def _qkv(p, x, cfg: LMConfig, pos):
+    B, S, D = x.shape
+    H, Hkv, hd = cfg.n_heads_p, cfg.n_kv_heads, cfg.hd
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, H, hd)
+    k = k.reshape(B, S, Hkv, hd)
+    v = v.reshape(B, S, Hkv, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = rope(q, pos, cfg.rope_theta)
+    k = rope(k, pos, cfg.rope_theta)
+    q = shard(q, "act_heads")
+    k = shard(k, "act_kv")
+    v = shard(v, "act_kv")
+    return q, k, v
+
+
+def _sdpa_train(q, k, v, cfg: LMConfig, *, window: int | None,
+                causal: bool = True):
+    """Full-sequence attention; optionally q-chunked via ``lax.scan`` so
+    only one chunk's logits block is ever live (flash-style peak memory in
+    XLA; the while-aware cost analysis multiplies the body by the trip
+    count).  Each chunk attends the full K/V with a position mask."""
+    B, S, H, hd = q.shape
+    qc = cfg.q_chunk
+    if not qc or S <= qc:
+        return ops.flash_attention(q, k, v, causal=causal, window=window,
+                                   softcap=cfg.softcap, impl=cfg.attn_impl)
+    pad = (-S) % qc                      # ragged tail (e.g. VLM patch prefix)
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nq = (S + pad) // qc
+    qs = jnp.moveaxis(q.reshape(B, nq, qc, H, hd), 1, 0)       # [nq,B,qc,H,hd]
+    offs = jnp.arange(nq, dtype=jnp.int32) * qc
+
+    def body(_, xs):
+        qi, off = xs
+        o = ops.flash_attention(qi, k, v, causal=causal, window=window,
+                                softcap=cfg.softcap, pos_offset=off,
+                                impl=cfg.attn_impl)
+        return 0, o
+
+    _, outs = jax.lax.scan(body, 0, (qs, offs))
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, S + pad, H, hd)
+    return out[:, :S] if pad else out
+
+
+def attn_train(p, x, cfg: LMConfig, pos, *, window: int | None = None,
+               causal: bool = True):
+    B, S, D = x.shape
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    q, k, v = _qkv(p, h, cfg, pos)
+    o = _sdpa_train(q, k, v, cfg, window=window, causal=causal)
+    o = o.reshape(B, S, cfg.n_heads_p * cfg.hd) @ p["wo"]
+    return x + shard(o, "act")
+
+
+def attn_prefill(p, x, cfg: LMConfig, pos, *, window: int | None = None,
+                 cache_len: int):
+    """Like train, but also returns the (padded) KV cache for decode."""
+    B, S, D = x.shape
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    q, k, v = _qkv(p, h, cfg, pos)
+    o = _sdpa_train(q, k, v, cfg, window=window)
+    o = o.reshape(B, S, cfg.n_heads_p * cfg.hd) @ p["wo"]
+    kc = jnp.zeros((B, cache_len, cfg.n_kv_heads, cfg.hd), k.dtype)
+    vc = jnp.zeros_like(kc)
+    if window is None and S > cache_len:
+        raise ValueError(
+            f"prefill length {S} exceeds cache_len {cache_len} "
+            "(only windowed layers may ring-wrap)")
+    ins = min(S, cache_len)
+    # Windowed layers keep a ring cache of the last `window` positions.
+    if window is not None and cache_len == window and S > window:
+        ks, vs = k[:, -window:], v[:, -window:]
+        # ring order: position p stored at slot p % window
+        slots = (jnp.arange(S - window, S)) % window
+        kc = kc.at[:, slots].set(ks)
+        vc = vc.at[:, slots].set(vs)
+    else:
+        kc = jax.lax.dynamic_update_slice_in_dim(kc, k[:, :ins], 0, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(vc, v[:, :ins], 0, axis=1)
+    cache = {"k": shard(kc, "cache"), "v": shard(vc, "cache")}
+    return x + shard(o, "act"), cache
+
+
+def attn_decode(p, x, cache, cfg: LMConfig, length, *,
+                window: int | None = None):
+    """x: [B, 1, D]; cache k/v: [B, Sc, Hkv, hd]; length: [B] tokens so far.
+
+    The new token sits at absolute position `length`; ring-indexed when the
+    cache is window-sized.
+    """
+    B, _, D = x.shape
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    q, k, v = _qkv(p, h, cfg, length[:, None])
+    Sc = cache["k"].shape[1]
+    slot = length % Sc if (window is not None and Sc == window) else length
+    # Masked (one-hot) update instead of scatter: stays collective-free when
+    # the cache is sequence-sharded over the model axis (DESIGN.md §6).
+    onehot = (jnp.arange(Sc)[None] == slot[:, None])[..., None, None]
+    kc = jnp.where(onehot, k[:, 0][:, None], cache["k"])
+    vc = jnp.where(onehot, v[:, 0][:, None], cache["v"])
+    ring = window is not None and Sc == window
+    o = ops.decode_attention(
+        q[:, 0], kc, vc,
+        lengths=jnp.minimum(length + 1, Sc) if ring else length + 1,
+        window=None if ring else window,
+        softcap=cfg.softcap, impl=cfg.attn_impl)
+    o = o.reshape(B, 1, cfg.n_heads_p * cfg.hd) @ p["wo"]
+    return x + o, {"k": kc, "v": vc}
+
+
+def attn_cache_init(cfg: LMConfig, B: int, cache_len: int, window=None):
+    Sc = min(cache_len, window) if window else cache_len
+    shape = (B, Sc, cfg.n_kv_heads, cfg.hd)
+    return {"k": jnp.zeros(shape, _dt(cfg)), "v": jnp.zeros(shape, _dt(cfg))}
+
+
+# ---------------------------------------------------------------------------
+# Cross-attention (encoder-decoder); encoder output is the static memory.
+# ---------------------------------------------------------------------------
+
+def xattn_init(key, cfg: LMConfig) -> dict:
+    ks = jax.random.split(key, 4)
+    D, H, Hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    dt = _dt(cfg)
+    return {
+        "norm": rms_norm_init(D),
+        "wq": dense_init(ks[0], D, H * hd, dt),
+        "wk": dense_init(ks[1], D, Hkv * hd, dt),
+        "wv": dense_init(ks[2], D, Hkv * hd, dt),
+        "wo": dense_init(ks[3], H * hd, D, dt),
+    }
+
+
+def xattn(p, x, memory, cfg: LMConfig):
+    """x: [B, S, D] decoder states; memory: [B, Sm, D] encoder output."""
+    B, S, D = x.shape
+    Sm = memory.shape[1]
+    H, Hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    q = (h @ p["wq"]).reshape(B, S, H, hd)
+    k = (memory @ p["wk"]).reshape(B, Sm, Hkv, hd)
+    v = (memory @ p["wv"]).reshape(B, Sm, Hkv, hd)
+    o = _sdpa_train(q, k, v, cfg, window=None, causal=False)
+    o = o.reshape(B, S, H * hd) @ p["wo"]
+    return x + o
+
+
+def xattn_kv(p, memory, cfg: LMConfig):
+    """Precompute cross-attention K/V once per prefill (decode fast path)."""
+    B, Sm, _ = memory.shape
+    k = (memory @ p["wk"]).reshape(B, Sm, cfg.n_kv_heads, cfg.hd)
+    v = (memory @ p["wv"]).reshape(B, Sm, cfg.n_kv_heads, cfg.hd)
+    return {"k": k, "v": v}
+
+
+def xattn_decode(p, x, kv, cfg: LMConfig, mem_len):
+    B, _, D = x.shape
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    q = (h @ p["wq"]).reshape(B, cfg.n_heads, cfg.hd)
+    o = ops.decode_attention(q, kv["k"], kv["v"], lengths=mem_len,
+                             impl=cfg.attn_impl)
+    o = o.reshape(B, 1, cfg.n_heads * cfg.hd) @ p["wo"]
+    return x + o
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP block (pre-norm residual)
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, cfg: LMConfig, d_ff: int | None = None) -> dict:
+    ks = jax.random.split(key, 3)
+    D, F = cfg.d_model, d_ff or cfg.d_ff
+    dt = _dt(cfg)
+    return {
+        "norm": rms_norm_init(D),
+        "w1": dense_init(ks[0], D, F, dt),        # gate
+        "w3": dense_init(ks[1], D, F, dt),        # up
+        "w2": dense_init(ks[2], F, D, dt),        # down
+    }
+
+
+def mlp(p, x, cfg: LMConfig):
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    a = shard(h @ p["w1"], "act_ff")
+    b = shard(h @ p["w3"], "act_ff")
+    o = (jax.nn.silu(a) * b) @ p["w2"]
+    return x + shard(o, "act")

@@ -1,0 +1,171 @@
+"""Top-level model assembly: build_model(cfg) → init / loss / prefill /
+decode for every assigned architecture family.
+
+Batch conventions (same keys as ``repro.configs.input_specs``):
+  train   {"tokens": (B,S) i32, "labels": (B,S) i32}
+          + {"patch_embeds": (B,P,D)} for VLM (anyres frontend STUB)
+          + {"src_embeds": (B,Se,D)} for enc-dec (audio frontend STUB)
+  prefill {"tokens": (B,S)} (+ stub embeds)
+  decode  {"tokens": (B,1), "lengths": (B,)} + caches (+ mem_len enc-dec)
+
+Loss: token-level cross-entropy (labels = -1 are masked) + MoE router
+load-balancing aux.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding.partition import shard
+from .config import LMConfig
+from .layers import rms_norm, rms_norm_init
+from .transformer import (stack_cache_init, stack_decode, stack_init,
+                          stack_prefill, stack_train)
+
+
+def _dt(cfg):
+    return jnp.dtype(cfg.dtype)
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: LMConfig
+    init: Callable
+    loss_fn: Callable                  # (params, batch) -> (loss, metrics)
+    prefill: Callable                  # (params, batch) -> (logits, caches)
+    decode_step: Callable              # (params, batch, caches) -> (logits, caches)
+    init_cache: Callable               # (B, cache_len) -> caches
+    param_count: Callable
+
+
+def _enc_plan(cfg: LMConfig):
+    return [("attn", cfg.n_enc_layers)]
+
+
+def _dec_plan(cfg: LMConfig):
+    if cfg.family == "encdec":
+        return [("xdec", cfg.n_layers)]
+    return cfg.layer_plan()
+
+
+def init_params(cfg: LMConfig, key) -> dict:
+    k_e, k_g, k_h, k_enc = jax.random.split(key, 4)
+    D, Vp = cfg.d_model, cfg.vocab_padded
+    p = {
+        "embed": (jax.random.normal(k_e, (Vp, D), jnp.float32)
+                  * (D ** -0.5)).astype(_dt(cfg)),
+        "groups": stack_init(k_g, cfg, plan=_dec_plan(cfg)),
+        "final_norm": rms_norm_init(D),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = (jax.random.normal(k_h, (D, Vp), jnp.float32)
+                        * (D ** -0.5)).astype(_dt(cfg))
+    if cfg.family == "encdec":
+        p["enc_groups"] = stack_init(k_enc, cfg, plan=_enc_plan(cfg))
+        p["enc_norm"] = rms_norm_init(D)
+    return p
+
+
+def _logits(cfg, p, x):
+    head = p["embed"].T if cfg.tie_embeddings else p["lm_head"]
+    return shard((x @ head).astype(jnp.float32), "logits")
+
+
+def _embed(cfg, p, tokens):
+    return p["embed"][tokens] * jnp.asarray(
+        cfg.d_model ** 0.5, _dt(cfg))
+
+
+def _encode(cfg, p, src_embeds):
+    B, Se, D = src_embeds.shape
+    pos = jnp.broadcast_to(jnp.arange(Se)[None], (B, Se))
+    x, _ = stack_train(p["enc_groups"], src_embeds.astype(_dt(cfg)), cfg, pos,
+                       extra={"bidir": True}, plan=_enc_plan(cfg))
+    return rms_norm(x, p["enc_norm"], cfg.norm_eps)
+
+
+def _prep_inputs(cfg, p, batch):
+    """Token embeddings (+ stub-frontend prefix), positions, #prefix."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = _embed(cfg, p, tokens)
+    n_front = 0
+    if cfg.frontend == "patch" and "patch_embeds" in batch:
+        pe = batch["patch_embeds"].astype(_dt(cfg))
+        n_front = pe.shape[1]
+        x = jnp.concatenate([pe, x], axis=1)
+    pos = jnp.broadcast_to(jnp.arange(x.shape[1])[None], (B, x.shape[1]))
+    return shard(x, "act"), pos, n_front
+
+
+def loss_fn(cfg: LMConfig, params, batch):
+    x, pos, n_front = _prep_inputs(cfg, params, batch)
+    extra = {}
+    if cfg.family == "encdec":
+        extra["memory"] = _encode(cfg, params, batch["src_embeds"])
+    x, aux = stack_train(params["groups"], x, cfg, pos, extra=extra,
+                         plan=_dec_plan(cfg))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if n_front:
+        x = x[:, n_front:]
+    logits = _logits(cfg, params, x)
+    labels = batch["labels"]
+    mask = (labels >= 0).astype(jnp.float32)
+    lab = jnp.maximum(labels, 0)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, lab[..., None], axis=-1)[..., 0]
+    ntok = jnp.maximum(mask.sum(), 1.0)
+    ce = -(ll * mask).sum() / ntok
+    loss = ce + cfg.router_aux_weight * aux
+    return loss, {"ce": ce, "aux": aux, "ntok": ntok}
+
+
+def prefill(cfg: LMConfig, params, batch, cache_len: int):
+    x, pos, n_front = _prep_inputs(cfg, params, batch)
+    extra = {}
+    if cfg.family == "encdec":
+        extra["memory"] = _encode(cfg, params, batch["src_embeds"])
+    x, caches, _ = stack_prefill(params["groups"], x, cfg, pos, cache_len,
+                                 extra=extra, plan=_dec_plan(cfg))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = _logits(cfg, params, x[:, -1:])
+    return logits[:, 0], caches
+
+
+def decode_step(cfg: LMConfig, params, batch, caches):
+    """batch: {"tokens": (B,1), "lengths": (B,)} (+ "mem_len" enc-dec)."""
+    tokens, lengths = batch["tokens"], batch["lengths"]
+    x = _embed(cfg, params, tokens)
+    extra = {}
+    if cfg.family == "encdec":
+        extra["mem_len"] = batch["mem_len"]
+    x, caches = stack_decode(params["groups"], x, caches, cfg, lengths,
+                             extra=extra, plan=_dec_plan(cfg))
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = _logits(cfg, params, x)
+    return logits[:, 0], caches
+
+
+def init_cache(cfg: LMConfig, B: int, cache_len: int, mem_len: int = 0):
+    return stack_cache_init(cfg, B, cache_len, plan=_dec_plan(cfg),
+                            mem_len=mem_len)
+
+
+def param_count(params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))
+
+
+def build_model(cfg: LMConfig) -> Model:
+    return Model(
+        cfg=cfg,
+        init=functools.partial(init_params, cfg),
+        loss_fn=functools.partial(loss_fn, cfg),
+        prefill=functools.partial(prefill, cfg),
+        decode_step=functools.partial(decode_step, cfg),
+        init_cache=functools.partial(init_cache, cfg),
+        param_count=param_count,
+    )

@@ -1,0 +1,103 @@
+"""Mixture-of-Experts block: top-k routing with capacity-sort dispatch.
+
+TPU-native dispatch (DESIGN.md §3): instead of the (T, E, C) one-hot
+dispatch einsum (O(T·E·C) memory) we sort token-assignments by expert *within
+each batch row* and gather each expert's first-C tokens, giving dense
+(B, E, C, D) buffers of the same order as the activations themselves
+(C = S·k/E·cf).  Per-row dispatch keeps every index operation local to the
+batch shard — no cross-data-shard collectives are induced by the sort.
+
+Sharding: experts over `model` when divisible (moonshot 64e/16), otherwise
+the expert FFN is tensor-parallel on d_ff (grok 8e: all experts resident,
+each sharded 16-way).  Router aux loss (load-balancing, Switch-style) is
+returned for the train loss.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..sharding.partition import shard
+from .config import LMConfig
+from .layers import dense_init, rms_norm, rms_norm_init
+
+
+def moe_init(key, cfg: LMConfig) -> dict:
+    ks = jax.random.split(key, 4)
+    D, F, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "norm": rms_norm_init(D),
+        "router": dense_init(ks[0], D, E, jnp.float32),
+        "we1": (jax.random.normal(ks[1], (E, D, F), jnp.float32)
+                * (D ** -0.5)).astype(dt),
+        "we3": (jax.random.normal(ks[2], (E, D, F), jnp.float32)
+                * (D ** -0.5)).astype(dt),
+        "we2": (jax.random.normal(ks[3], (E, F, D), jnp.float32)
+                * (F ** -0.5)).astype(dt),
+    }
+
+
+def _capacity(cfg: LMConfig, S: int) -> int:
+    if S == 1:
+        # decode: top-k experts are distinct, so one slot per expert is
+        # dropless and keeps the dispatch einsum minimal (memory-bound path)
+        return 1
+    c = int(S * cfg.top_k * cfg.capacity_factor / cfg.n_experts) + 1
+    return max(8, -(-c // 8) * 8)
+
+
+def moe_mlp(p, x, cfg: LMConfig) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """x: [B, S, D] -> (y [B, S, D], aux_loss scalar)."""
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    C = _capacity(cfg, S)
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+
+    logits = (h.astype(jnp.float32) @ p["router"])          # [B, S, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, eidx = jax.lax.top_k(probs, K)                # [B, S, K]
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # Load-balancing aux loss (Switch): E * sum_e f_e * p_e.
+    me = probs.mean(axis=(0, 1))                             # [E]
+    ce = jnp.zeros((E,), jnp.float32).at[eidx.reshape(-1)].add(
+        1.0 / (B * S * K))
+    aux = E * jnp.sum(me * ce)
+
+    # ---- per-row capacity-sort dispatch --------------------------------
+    flat_e = eidx.reshape(B, S * K)                          # assignments
+    sort_idx = jnp.argsort(flat_e, axis=-1)                  # [B, S*K]
+    sorted_e = jnp.take_along_axis(flat_e, sort_idx, axis=-1)
+    # counts/starts per expert per row
+    counts = jax.vmap(lambda r: jnp.bincount(r, length=E))(flat_e)  # [B, E]
+    starts = jnp.cumsum(counts, axis=-1) - counts            # [B, E]
+    slot = starts[:, :, None] + jnp.arange(C)[None, None]    # [B, E, C]
+    valid = jnp.arange(C)[None, None] < counts[:, :, None]   # [B, E, C]
+    slot_c = jnp.minimum(slot, S * K - 1)
+    assign = jnp.take_along_axis(                            # idx into S*K
+        sort_idx, slot_c.reshape(B, E * C), axis=-1).reshape(B, E, C)
+    tok = assign // K                                        # token position
+    gsel = jnp.take_along_axis(
+        gate_vals.reshape(B, S * K), assign.reshape(B, E * C),
+        axis=-1).reshape(B, E, C)
+    gsel = jnp.where(valid, gsel, 0.0)
+
+    # gather -> [B, E, C, D]
+    xe = jnp.take_along_axis(h[:, None], tok[..., None], axis=2)
+    xe = shard(xe, "moe_disp")
+    a = jnp.einsum("becd,edf->becf", xe, p["we1"])
+    b = jnp.einsum("becd,edf->becf", xe, p["we3"])
+    hh = shard(jax.nn.silu(a) * b, "moe_ff")
+    ye = jnp.einsum("becf,efd->becd", hh, p["we2"])
+    ye = ye * gsel[..., None].astype(ye.dtype)
+
+    # combine: scatter-add back over token positions (vmapped over rows so
+    # the scatter stays batch-local under pjit)
+    def combine_row(ye_row, tok_row):
+        return jnp.zeros((S, D), ye.dtype).at[tok_row.reshape(-1)].add(
+            ye_row.reshape(E * C, D), mode="drop")
+
+    y = jax.vmap(combine_row)(ye, tok)
+    return x + shard(y.astype(x.dtype), "act"), aux

@@ -1,0 +1,110 @@
+"""Griffin recurrent block with RG-LRU (recurrentgemma-9b).
+
+Structure (Griffin / recurrentgemma):
+    x -> norm -> two branches:
+      gate branch : linear(D, d_rnn) -> GeLU
+      rec  branch : linear(D, d_rnn) -> causal conv(width 4) -> RG-LRU
+    out = (rec * gate) @ out_proj
+
+RG-LRU recurrence (per channel):
+    r_t = sigmoid(W_a u_t + b_a)          recurrence gate
+    i_t = sigmoid(W_i u_t + b_i)          input gate
+    a_t = exp(-c * softplus(Lambda) * r_t)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * u_t)
+
+The scan is the Pallas ``rglru_scan`` kernel on TPU (ref scan elsewhere).
+State is (B, d_rnn) — constant in context length, so recurrentgemma runs
+``long_500k``.  c = 8 (paper constant).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ops
+from ..sharding.partition import shard
+from .config import LMConfig
+from .layers import dense_init, rms_norm, rms_norm_init
+
+_C = 8.0
+
+
+def rglru_init(key, cfg: LMConfig) -> dict:
+    ks = jax.random.split(key, 6)
+    D, R = cfg.d_model, cfg.d_rnn_
+    W = cfg.conv_width
+    dt = jnp.dtype(cfg.dtype)
+    # Lambda init so that a^c = sigmoid(Lambda)^c lies in (0.9, 0.999).
+    u = jax.random.uniform(ks[0], (R,), jnp.float32, 0.9 ** (1 / _C),
+                           0.999 ** (1 / _C))
+    lam = jnp.log(u / (1.0 - u))
+    return {
+        "norm": rms_norm_init(D),
+        "rg_in": dense_init(ks[1], D, R, dt),
+        "rg_gate": dense_init(ks[2], D, R, dt),
+        "rg_conv_w": (jax.random.normal(ks[3], (W, R), jnp.float32)
+                      * (W ** -0.5)).astype(dt),
+        "rg_conv_b": jnp.zeros((R,), dt),
+        "rg_a": dense_init(ks[4], R, R, jnp.float32, scale=R ** -0.5),
+        "rg_i": dense_init(ks[5], R, R, jnp.float32, scale=R ** -0.5),
+        "rg_lambda": lam,
+        "rg_out": dense_init(jax.random.fold_in(key, 7), R, D, dt),
+    }
+
+
+def _conv_causal(u, w, b, state=None):
+    W = w.shape[0]
+    if state is None:
+        state = jnp.zeros((u.shape[0], W - 1, u.shape[2]), u.dtype)
+    ext = jnp.concatenate([state, u], axis=1)
+    y = sum(ext[:, i:i + u.shape[1]] * w[i][None, None] for i in range(W))
+    return y + b[None, None], ext[:, -(W - 1):]
+
+
+def _gates(p, u):
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(uf @ p["rg_a"])
+    i = jax.nn.sigmoid(uf @ p["rg_i"])
+    log_a = -_C * jax.nn.softplus(p["rg_lambda"])[None, None] * r
+    a = jnp.exp(log_a)
+    return a, (i * uf)
+
+
+def rglru_train(p, x, cfg: LMConfig, *, return_cache: bool = False):
+    B, S, D = x.shape
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    gate = jax.nn.gelu(h @ p["rg_gate"])
+    u = shard(h @ p["rg_in"], "act_inner")
+    u, conv_state = _conv_causal(u, p["rg_conv_w"], p["rg_conv_b"])
+    a, xin = _gates(p, u)
+    hs, hT = ops.rglru_scan(xin.astype(u.dtype), a.astype(u.dtype),
+                            impl=cfg.attn_impl)
+    y = hs.astype(x.dtype) * gate
+    o = y @ p["rg_out"]
+    out = x + shard(o, "act")
+    if not return_cache:
+        return out
+    return out, {"conv": conv_state, "h": shard(hT, "state")}
+
+
+def rglru_decode(p, x, cache, cfg: LMConfig, length):
+    B = x.shape[0]
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    gate = jax.nn.gelu(h @ p["rg_gate"])
+    u = h @ p["rg_in"]
+    u, conv_state = _conv_causal(u, p["rg_conv_w"], p["rg_conv_b"],
+                                 state=cache["conv"])
+    a, xin = _gates(p, u)
+    a0 = a[:, 0]
+    hn = a0 * cache["h"] + jnp.sqrt(jnp.maximum(1 - a0 * a0, 0.0)) * xin[:, 0]
+    y = hn[:, None].astype(x.dtype) * gate
+    o = y @ p["rg_out"]
+    return x + o, {"conv": conv_state, "h": hn}
+
+
+def rglru_cache_init(cfg: LMConfig, B: int):
+    return {
+        "conv": jnp.zeros((B, cfg.conv_width - 1, cfg.d_rnn_),
+                          jnp.dtype(cfg.dtype)),
+        "h": jnp.zeros((B, cfg.d_rnn_), jnp.float32),
+    }

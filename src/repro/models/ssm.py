@@ -1,0 +1,151 @@
+"""Mamba-1 block (falcon-mamba-7b): causal conv + selective SSM scan.
+
+Structure (Mamba paper):
+    x -> in_proj -> (u, z)                u, z: [B, S, d_inner]
+    u -> causal depthwise conv(width 4) -> silu
+    (dt, B, C) = x_proj(u);  dt = softplus(dt_proj(dt) + bias)
+    y = selective_scan(u, dt, A=-exp(A_log), B, C, D)
+    out = (y * silu(z)) @ out_proj
+
+Training/prefill uses a *chunked* scan: ``lax.scan`` over sequence chunks
+carrying the (B, d_inner, N) state, with the cheap within-chunk recurrence
+unrolled — state tensors never materialize beyond one chunk (DESIGN.md §3).
+On TPU the inner chunk can be swapped for the Pallas ``selective_scan``
+kernel.  Decode keeps (conv window, ssm state) in the cache — O(1) per
+token, which is what makes falcon-mamba a ``long_500k`` architecture.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ops
+from ..sharding.partition import shard
+from .config import LMConfig
+from .layers import dense_init, rms_norm, rms_norm_init
+
+
+def mamba_init(key, cfg: LMConfig) -> dict:
+    ks = jax.random.split(key, 6)
+    D, Di, N, R = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.dt_rank_
+    W = cfg.ssm_conv
+    dt = jnp.dtype(cfg.dtype)
+    # S4D-real initialization for A; dt bias giving softplus(dt) ~ U(1e-3, 0.1)
+    A = jnp.broadcast_to(jnp.arange(1, N + 1, dtype=jnp.float32)[None], (Di, N))
+    u = jax.random.uniform(ks[4], (Di,), jnp.float32)
+    dt_init = jnp.exp(u * (jnp.log(0.1) - jnp.log(1e-3)) + jnp.log(1e-3))
+    dt_bias = dt_init + jnp.log1p(-jnp.exp(-dt_init))  # inverse softplus
+    return {
+        "norm": rms_norm_init(D),
+        "in_proj": dense_init(ks[0], D, 2 * Di, dt),
+        "conv_w": (jax.random.normal(ks[1], (W, Di), jnp.float32)
+                   * (W ** -0.5)).astype(dt),
+        "conv_b": jnp.zeros((Di,), dt),
+        "x_proj": dense_init(ks[2], Di, R + 2 * N, dt),
+        "dt_w": dense_init(ks[3], R, Di, jnp.float32, scale=R ** -0.5),
+        "dt_b": dt_bias,
+        "A_log": jnp.log(A),
+        "Dskip": jnp.ones((Di,), jnp.float32),
+        "out_proj": dense_init(ks[5], Di, D, dt),
+    }
+
+
+def _conv_causal(u, w, b, state=None):
+    """Depthwise causal conv. u: [B, S, Di]; w: [W, Di]; state: [B, W-1, Di].
+
+    Returns (y [B, S, Di], new_state [B, W-1, Di]).
+    """
+    W = w.shape[0]
+    if state is None:
+        state = jnp.zeros((u.shape[0], W - 1, u.shape[2]), u.dtype)
+    ext = jnp.concatenate([state, u], axis=1)                # [B, S+W-1, Di]
+    y = sum(ext[:, i:i + u.shape[1]] * w[i][None, None] for i in range(W))
+    return y + b[None, None], ext[:, -(W - 1):]
+
+
+def _ssm_params(p, u, cfg: LMConfig):
+    R, N = cfg.dt_rank_, cfg.ssm_state
+    xdbc = u @ p["x_proj"]                                    # [B,S,R+2N]
+    dt_r, Bm, Cm = jnp.split(xdbc, [R, R + N], axis=-1)
+    dt = jax.nn.softplus(dt_r.astype(jnp.float32) @ p["dt_w"]
+                         + p["dt_b"][None, None])
+    A = -jnp.exp(p["A_log"])
+    return dt, A, Bm.astype(jnp.float32), Cm.astype(jnp.float32)
+
+
+def _scan_chunked(u, dt, A, Bm, Cm, Dskip, h0, chunk: int, impl: str):
+    """lax.scan over chunks; inside each chunk the Pallas/ref kernel runs."""
+    B, S, Di = u.shape
+    nc = -(-S // chunk)
+    pad = nc * chunk - S
+    if pad:
+        u = jnp.pad(u, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0)))
+    resh = lambda t: jnp.moveaxis(
+        t.reshape(B, nc, chunk, *t.shape[2:]), 1, 0)
+
+    def body(h, xs):
+        uc, dtc, bc, cc = xs
+        y, h = ops.selective_scan(uc, dtc, A, bc, cc, Dskip, h, impl=impl)
+        return h, y
+
+    hT, ys = jax.lax.scan(body, h0, (resh(u), resh(dt), resh(Bm), resh(Cm)))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, nc * chunk, Di)[:, :S]
+    return y, hT
+
+
+def mamba_train(p, x, cfg: LMConfig, *, chunk: int = 256,
+                return_cache: bool = False, cache_len: int = 0):
+    """x: [B, S, D] -> [B, S, D] (+ cache when prefilling)."""
+    B, S, D = x.shape
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    uz = h @ p["in_proj"]
+    u, z = jnp.split(uz, 2, axis=-1)
+    u = shard(u, "act_inner")
+    u, conv_state = _conv_causal(u, p["conv_w"], p["conv_b"])
+    u = jax.nn.silu(u)
+    dt, A, Bm, Cm = _ssm_params(p, u, cfg)
+    h0 = jnp.zeros((B, cfg.d_inner, cfg.ssm_state), jnp.float32)
+    if S <= chunk:
+        y, hT = ops.selective_scan(u, dt, A, Bm, Cm, p["Dskip"], h0,
+                                   impl=cfg.attn_impl)
+    else:
+        y, hT = _scan_chunked(u, dt, A, Bm, Cm, p["Dskip"], h0, chunk,
+                              cfg.attn_impl)
+    y = y * jax.nn.silu(z)
+    o = y @ p["out_proj"]
+    out = x + shard(o, "act")
+    if not return_cache:
+        return out
+    cache = {"conv": conv_state, "h": shard(hT, "state")}
+    return out, cache
+
+
+def mamba_decode(p, x, cache, cfg: LMConfig, length):
+    """One token: x [B, 1, D]; cache {conv [B, W-1, Di], h [B, Di, N]}."""
+    B = x.shape[0]
+    h = rms_norm(x, p["norm"], cfg.norm_eps)
+    uz = h @ p["in_proj"]
+    u, z = jnp.split(uz, 2, axis=-1)
+    u, conv_state = _conv_causal(u, p["conv_w"], p["conv_b"],
+                                 state=cache["conv"])
+    u = jax.nn.silu(u)
+    dt, A, Bm, Cm = _ssm_params(p, u, cfg)
+    dA = jnp.exp(dt[:, 0, :, None] * A[None])                # [B, Di, N]
+    hn = dA * cache["h"] + (dt[:, 0] * u[:, 0].astype(jnp.float32)
+                            )[..., None] * Bm[:, 0, None, :]
+    y = jnp.einsum("bdn,bn->bd", hn, Cm[:, 0]) + p["Dskip"][None] \
+        * u[:, 0].astype(jnp.float32)
+    y = y[:, None].astype(x.dtype) * jax.nn.silu(z)
+    o = y @ p["out_proj"]
+    return x + o, {"conv": conv_state, "h": hn}
+
+
+def mamba_cache_init(cfg: LMConfig, B: int):
+    return {
+        "conv": jnp.zeros((B, cfg.ssm_conv - 1, cfg.d_inner),
+                          jnp.dtype(cfg.dtype)),
+        "h": jnp.zeros((B, cfg.d_inner, cfg.ssm_state), jnp.float32),
+    }

@@ -1,0 +1,305 @@
+"""Generic decoder stack: dense / MoE / SSM / hybrid layers, one code path.
+
+Layers are grouped into homogeneous runs (``LMConfig.layer_plan``); each
+group's parameters are stacked on a leading axis and applied with
+``lax.scan`` (O(1) HLO size in depth — required for the 64 AOT dry-run
+compiles) or with an unrolled python loop (``scan_layers=False`` — exact
+``cost_analysis`` FLOPs, used by the roofline dry-run; XLA counts a while
+body once, see DESIGN.md §7).  ``remat`` wraps each layer body with
+``jax.checkpoint``.
+
+Layer kinds:
+    attn   — GQA attention + SwiGLU MLP (dense; also encoder with mask off)
+    moe    — GQA attention + top-k MoE MLP
+    mamba  — Mamba-1 block
+    rec    — RG-LRU recurrent block + MLP (griffin)
+    lattn  — local (sliding-window) attention + MLP (griffin)
+    super  — one griffin super-block: cfg.pattern of rec/lattn sub-blocks
+    xdec   — decoder layer with cross-attention (encoder-decoder)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .config import LMConfig
+from . import layers as L
+from .moe import moe_init, moe_mlp
+from .rglru import rglru_cache_init, rglru_decode, rglru_init, rglru_train
+from .ssm import mamba_cache_init, mamba_decode, mamba_init, mamba_train
+
+
+# ---------------------------------------------------------------------------
+# Single-layer init / apply, dispatched on kind.
+# ---------------------------------------------------------------------------
+
+def layer_init(kind: str, key, cfg: LMConfig) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    if kind == "attn":
+        return {"attn": L.attn_init(k1, cfg), "mlp": L.mlp_init(k2, cfg)}
+    if kind == "moe":
+        return {"attn": L.attn_init(k1, cfg), "moe": moe_init(k2, cfg)}
+    if kind == "mamba":
+        return {"mamba": mamba_init(k1, cfg)}
+    if kind == "rec":
+        return {"rec": rglru_init(k1, cfg), "mlp": L.mlp_init(k2, cfg)}
+    if kind == "lattn":
+        return {"attn": L.attn_init(k1, cfg), "mlp": L.mlp_init(k2, cfg)}
+    if kind == "super":
+        out = {}
+        for i, ch in enumerate(cfg.pattern):
+            sub = "rec" if ch == "r" else "lattn"
+            out[f"s{i}"] = layer_init(sub, jax.random.fold_in(key, i), cfg)
+        return out
+    if kind == "xdec":
+        return {"attn": L.attn_init(k1, cfg), "xattn": L.xattn_init(k2, cfg),
+                "mlp": L.mlp_init(k3, cfg)}
+    raise ValueError(kind)
+
+
+def _win(cfg: LMConfig) -> int | None:
+    return cfg.window or None
+
+
+def layer_train(kind: str, p, x, cfg: LMConfig, pos, extra) -> tuple:
+    """Returns (x, aux) — aux is the MoE load-balance loss contribution."""
+    aux = jnp.zeros((), jnp.float32)
+    if kind == "attn":
+        x = L.attn_train(p["attn"], x, cfg, pos,
+                         causal=not extra.get("bidir", False))
+        x = L.mlp(p["mlp"], x, cfg)
+    elif kind == "moe":
+        x = L.attn_train(p["attn"], x, cfg, pos)
+        x, aux = moe_mlp(p["moe"], x, cfg)
+    elif kind == "mamba":
+        x = mamba_train(p["mamba"], x, cfg)
+    elif kind == "rec":
+        x = rglru_train(p["rec"], x, cfg)
+        x = L.mlp(p["mlp"], x, cfg)
+    elif kind == "lattn":
+        x = L.attn_train(p["attn"], x, cfg, pos, window=_win(cfg))
+        x = L.mlp(p["mlp"], x, cfg)
+    elif kind == "super":
+        for i, ch in enumerate(cfg.pattern):
+            sub = "rec" if ch == "r" else "lattn"
+            x, a = layer_train(sub, p[f"s{i}"], x, cfg, pos, extra)
+            aux = aux + a
+    elif kind == "xdec":
+        x = L.attn_train(p["attn"], x, cfg, pos)
+        x = L.xattn(p["xattn"], x, extra["memory"], cfg)
+        x = L.mlp(p["mlp"], x, cfg)
+    else:
+        raise ValueError(kind)
+    return x, aux
+
+
+def layer_prefill(kind: str, p, x, cfg: LMConfig, pos, cache_len: int,
+                  extra) -> tuple:
+    aux = jnp.zeros((), jnp.float32)
+    if kind == "attn":
+        x, c = L.attn_prefill(p["attn"], x, cfg, pos, cache_len=cache_len)
+        x = L.mlp(p["mlp"], x, cfg)
+    elif kind == "moe":
+        x, c = L.attn_prefill(p["attn"], x, cfg, pos, cache_len=cache_len)
+        x, aux = moe_mlp(p["moe"], x, cfg)
+    elif kind == "mamba":
+        x, c = mamba_train(p["mamba"], x, cfg, return_cache=True)
+    elif kind == "rec":
+        x, c = rglru_train(p["rec"], x, cfg, return_cache=True)
+        x = L.mlp(p["mlp"], x, cfg)
+    elif kind == "lattn":
+        w = _win(cfg)
+        cl = min(cache_len, w) if w else cache_len
+        x, c = L.attn_prefill(p["attn"], x, cfg, pos, window=w, cache_len=cl)
+        x = L.mlp(p["mlp"], x, cfg)
+    elif kind == "super":
+        c = {}
+        for i, ch in enumerate(cfg.pattern):
+            sub = "rec" if ch == "r" else "lattn"
+            x, ci, a = layer_prefill(sub, p[f"s{i}"], x, cfg, pos, cache_len,
+                                     extra)
+            c[f"s{i}"] = ci
+            aux = aux + a
+    elif kind == "xdec":
+        x, c = L.attn_prefill(p["attn"], x, cfg, pos, cache_len=cache_len)
+        x = L.xattn(p["xattn"], x, extra["memory"], cfg)
+        c = {"self": c, "cross": L.xattn_kv(p["xattn"], extra["memory"], cfg)}
+        x = L.mlp(p["mlp"], x, cfg)
+    else:
+        raise ValueError(kind)
+    return x, c, aux
+
+
+def layer_decode(kind: str, p, x, cache, cfg: LMConfig, length, extra
+                 ) -> tuple:
+    if kind in ("attn", "moe"):
+        x, cache = L.attn_decode(p["attn"], x, cache, cfg, length)
+        if kind == "attn":
+            x = L.mlp(p["mlp"], x, cfg)
+        else:
+            x, _ = moe_mlp(p["moe"], x, cfg)
+    elif kind == "mamba":
+        x, cache = mamba_decode(p["mamba"], x, cache, cfg, length)
+    elif kind == "rec":
+        x, cache = rglru_decode(p["rec"], x, cache, cfg, length)
+        x = L.mlp(p["mlp"], x, cfg)
+    elif kind == "lattn":
+        x, cache = L.attn_decode(p["attn"], x, cache, cfg, length,
+                                 window=_win(cfg))
+        x = L.mlp(p["mlp"], x, cfg)
+    elif kind == "super":
+        nc = {}
+        for i, ch in enumerate(cfg.pattern):
+            sub = "rec" if ch == "r" else "lattn"
+            x, nc[f"s{i}"] = layer_decode(sub, p[f"s{i}"], x, cache[f"s{i}"],
+                                          cfg, length, extra)
+        cache = nc
+    elif kind == "xdec":
+        x, sc = L.attn_decode(p["attn"], x, cache["self"], cfg, length)
+        x = L.xattn_decode(p["xattn"], x, cache["cross"], cfg,
+                           extra["mem_len"])
+        x = L.mlp(p["mlp"], x, cfg)
+        cache = {"self": sc, "cross": cache["cross"]}
+    else:
+        raise ValueError(kind)
+    return x, cache
+
+
+def layer_cache_init(kind: str, cfg: LMConfig, B: int, cache_len: int,
+                     mem_len: int = 0):
+    if kind in ("attn", "moe"):
+        return L.attn_cache_init(cfg, B, cache_len)
+    if kind == "mamba":
+        return mamba_cache_init(cfg, B)
+    if kind == "rec":
+        return rglru_cache_init(cfg, B)
+    if kind == "lattn":
+        return L.attn_cache_init(cfg, B, cache_len, window=_win(cfg))
+    if kind == "super":
+        return {f"s{i}": layer_cache_init("rec" if ch == "r" else "lattn",
+                                          cfg, B, cache_len)
+                for i, ch in enumerate(cfg.pattern)}
+    if kind == "xdec":
+        kv = jnp.zeros((B, mem_len, cfg.n_kv_heads, cfg.hd),
+                       jnp.dtype(cfg.dtype))
+        return {"self": L.attn_cache_init(cfg, B, cache_len),
+                "cross": {"k": kv, "v": kv}}
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Stacks of homogeneous groups: init + scan/unrolled application.
+# ---------------------------------------------------------------------------
+
+def stack_init(key, cfg: LMConfig, plan=None) -> list:
+    groups = []
+    plan = plan if plan is not None else cfg.layer_plan()
+    for gi, (kind, n) in enumerate(plan):
+        keys = jax.random.split(jax.random.fold_in(key, gi), n)
+        groups.append(jax.vmap(
+            lambda k, kind=kind: layer_init(kind, k, cfg))(keys))
+    return groups
+
+
+def _idx(tree, i: int):
+    return jax.tree.map(lambda t: t[i], tree)
+
+
+def stack_train(groups, x, cfg: LMConfig, pos, extra=None, plan=None):
+    extra = extra or {}
+    aux = jnp.zeros((), jnp.float32)
+    plan = plan if plan is not None else cfg.layer_plan()
+    for (kind, n), gp in zip(plan, groups):
+        body = functools.partial(layer_train, kind, cfg=cfg, pos=pos,
+                                 extra=extra)
+        if cfg.remat:
+            body = jax.checkpoint(
+                lambda p, x, _b=body: _b(p, x),
+                policy=jax.checkpoint_policies.nothing_saveable)
+        if cfg.scan_layers:
+            def scan_body(carry, p, _b=body):
+                x, aux = carry
+                x, a = _b(p, x)
+                return (x, aux + a), None
+            (x, aux), _ = jax.lax.scan(scan_body, (x, aux), gp)
+        else:
+            for i in range(n):
+                x, a = body(_idx(gp, i), x)
+                aux = aux + a
+    return x, aux
+
+
+def stack_prefill(groups, x, cfg: LMConfig, pos, cache_len: int,
+                  extra=None, plan=None):
+    extra = extra or {}
+    aux = jnp.zeros((), jnp.float32)
+    caches = []
+    plan = plan if plan is not None else cfg.layer_plan()
+    for (kind, n), gp in zip(plan, groups):
+        body = functools.partial(layer_prefill, kind, cfg=cfg, pos=pos,
+                                 cache_len=cache_len, extra=extra)
+        if cfg.scan_layers:
+            def scan_body(carry, p, _b=body):
+                x, aux = carry
+                x, c, a = _b(p, x)
+                return (x, aux + a), c
+            (x, aux), cs = jax.lax.scan(scan_body, (x, aux), gp)
+        else:
+            per = []
+            for i in range(n):
+                x, c, a = body(_idx(gp, i), x)
+                per.append(c)
+                aux = aux + a
+            cs = jax.tree.map(lambda *ts: jnp.stack(ts), *per)
+        caches.append(cs)
+    return x, caches, aux
+
+
+def stack_decode(groups, x, caches, cfg: LMConfig, length, extra=None,
+                 plan=None):
+    """Decode pass.  In scan mode the stacked caches are a *loop carry*
+    updated in place with dynamic_update_slice (XLA aliases carried while
+    buffers — one resident cache copy instead of the separate read/write
+    stacks a (xs, ys)-scan would allocate; at 32k contexts the KV cache is
+    the dominant decode buffer)."""
+    extra = extra or {}
+    new_caches = []
+    plan = plan if plan is not None else cfg.layer_plan()
+    for (kind, n), gp, cs in zip(plan, groups, caches):
+        body = functools.partial(layer_decode, kind, cfg=cfg, length=length,
+                                 extra=extra)
+        if cfg.scan_layers:
+            def loop_body(i, carry, _b=body, gp=gp):
+                x, cs = carry
+                p = _idx(gp, i)
+                c = jax.tree.map(
+                    lambda t: jax.lax.dynamic_index_in_dim(
+                        t, i, 0, keepdims=False), cs)
+                x, c_new = _b(p, x, c)
+                cs = jax.tree.map(
+                    lambda buf, cn: jax.lax.dynamic_update_index_in_dim(
+                        buf, cn.astype(buf.dtype), i, 0), cs, c_new)
+                return x, cs
+
+            x, cs = jax.lax.fori_loop(0, n, loop_body, (x, cs))
+        else:
+            outs = []
+            for i in range(n):
+                x, c = body(_idx(gp, i), x, _idx(cs, i))
+                outs.append(c)
+            cs = jax.tree.map(lambda *ts: jnp.stack(ts), *outs)
+        new_caches.append(cs)
+    return x, new_caches
+
+
+def stack_cache_init(cfg: LMConfig, B: int, cache_len: int, plan=None,
+                     mem_len: int = 0):
+    caches = []
+    plan = plan if plan is not None else cfg.layer_plan()
+    for kind, n in plan:
+        one = layer_cache_init(kind, cfg, B, cache_len, mem_len=mem_len)
+        caches.append(jax.tree.map(
+            lambda t: jnp.broadcast_to(t[None], (n,) + t.shape).copy(), one))
+    return caches

@@ -1,0 +1,121 @@
+"""Batched serving engine: prefill + decode with slot-based continuous
+batching.
+
+The engine owns a fixed pool of ``n_slots`` sequences and one jitted decode
+step over the whole pool (static shapes — one compile).  Requests join free
+slots via per-request prefill; every engine tick decodes all active slots in
+one batched call; finished slots (EOS or max_tokens) free immediately and
+the queue refills them — the vLLM-style loop reduced to its JAX-native
+essentials.  Slot state lives in the pooled KV cache; joining writes the
+request's prefilled cache into its slot with ``tree_map`` dynamic updates.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models.model import Model
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                 # [S] int32
+    max_tokens: int = 32
+    out_tokens: list = field(default_factory=list)
+    done: bool = False
+
+
+@dataclass
+class EngineConfig:
+    n_slots: int = 4
+    cache_len: int = 256
+    eos: int = 2
+    temperature: float = 0.0           # 0 -> greedy
+
+
+class ServeEngine:
+    def __init__(self, model: Model, params, cfg: EngineConfig):
+        self.model = model
+        self.params = params
+        self.cfg = cfg
+        self.caches = model.init_cache(cfg.n_slots, cfg.cache_len)
+        self.lengths = np.zeros(cfg.n_slots, np.int32)
+        self.last_tok = np.zeros(cfg.n_slots, np.int32)
+        self.slot_req: list[Request | None] = [None] * cfg.n_slots
+        self.queue: list[Request] = []
+        self._decode = jax.jit(model.decode_step)
+        self._prefill = jax.jit(
+            lambda p, b: model.prefill(p, b, cfg.cache_len))
+
+    # ------------------------------------------------------------------
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _join(self, slot: int, req: Request):
+        B = 1
+        prompt = jnp.asarray(req.prompt[None], jnp.int32)
+        logits, cache1 = self._prefill(self.params, {"tokens": prompt})
+        # Write the single-row prefill cache into the pooled cache at `slot`.
+        self.caches = jax.tree.map(
+            lambda pool, one: pool.at[:, slot].set(one[:, 0]),
+            self.caches, cache1)
+        tok = self._sample(np.asarray(logits)[0])
+        self.slot_req[slot] = req
+        self.lengths[slot] = len(req.prompt)
+        self.last_tok[slot] = tok
+        req.out_tokens.append(int(tok))
+
+    def _sample(self, logits: np.ndarray) -> int:
+        if self.cfg.temperature <= 0:
+            return int(np.argmax(logits))
+        p = np.exp((logits - logits.max()) / self.cfg.temperature)
+        p /= p.sum()
+        return int(np.random.default_rng(0).choice(len(p), p=p))
+
+    def _retire(self, slot: int):
+        req = self.slot_req[slot]
+        req.done = True
+        self.slot_req[slot] = None
+        self.lengths[slot] = 0
+
+    # ------------------------------------------------------------------
+    def step(self):
+        """One engine tick: refill slots, batched decode, retire finished."""
+        for slot in range(self.cfg.n_slots):
+            if self.slot_req[slot] is None and self.queue:
+                self._join(slot, self.queue.pop(0))
+        active = [i for i, r in enumerate(self.slot_req) if r is not None]
+        if not active:
+            return False
+        batch = {
+            "tokens": jnp.asarray(self.last_tok[:, None], jnp.int32),
+            "lengths": jnp.asarray(self.lengths, jnp.int32),
+        }
+        logits, self.caches = self._decode(self.params, batch, self.caches)
+        logits = np.asarray(logits)
+        for slot in active:
+            tok = self._sample(logits[slot])
+            req = self.slot_req[slot]
+            req.out_tokens.append(tok)
+            self.lengths[slot] += 1
+            self.last_tok[slot] = tok
+            hit_eos = tok == self.cfg.eos
+            full = (len(req.out_tokens) >= req.max_tokens
+                    or int(self.lengths[slot]) + 1 >= self.cfg.cache_len)
+            if hit_eos or full:
+                self._retire(slot)
+        return True
+
+    def run(self, max_ticks: int = 10_000) -> int:
+        ticks = 0
+        while ticks < max_ticks and (self.queue
+                                     or any(self.slot_req)):
+            if not self.step():
+                break
+            ticks += 1
+        return ticks

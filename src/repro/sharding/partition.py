@@ -1,0 +1,91 @@
+"""Mesh context + activation sharding constraints.
+
+Model code calls ``shard(x, logical_name)`` at block boundaries.  With no
+installed context this is a no-op (single-device tests); under
+``use_sharding(ctx)`` it applies ``with_sharding_constraint`` with the
+PartitionSpec the rules assigned to that logical activation — the same model
+code serves laptop smoke tests and the 512-chip dry-run.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from dataclasses import dataclass, field
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_CTX: contextvars.ContextVar = contextvars.ContextVar(
+    "repro_sharding_ctx", default=None)
+
+
+@dataclass(frozen=True)
+class MeshInfo:
+    """Physical mesh + the axis roles the rules map logical dims onto."""
+
+    mesh: Mesh
+    dp: tuple[str, ...]           # data-parallel axes, e.g. ("pod", "data")
+    tp: str = "model"             # tensor-parallel axis
+    # FSDP axes for parameter/optimizer shards; None -> same as dp.  The
+    # multi-pod policy keeps FSDP *intra-pod* (("data",)) so per-layer
+    # weight gathers never cross the slow DCI links — the pod axis then
+    # carries one grad all-reduce per step instead (§Perf iteration C1).
+    fsdp_over: tuple[str, ...] | None = None
+
+    @property
+    def tp_size(self) -> int:
+        axes = self.tp if isinstance(self.tp, tuple) else (self.tp,)
+        n = 1
+        for a in axes:
+            n *= self.mesh.shape[a]
+        return n
+
+    @property
+    def dp_size(self) -> int:
+        n = 1
+        for a in self.dp:
+            n *= self.mesh.shape[a]
+        return n
+
+    @property
+    def fsdp(self):
+        """Axes over which parameter/optimizer shards are scattered."""
+        if self.fsdp_over is not None:
+            return tuple(self.fsdp_over)
+        return self.dp if len(self.dp) == 1 else tuple(self.dp)
+
+    def named(self, spec: P) -> NamedSharding:
+        return NamedSharding(self.mesh, spec)
+
+
+@dataclass
+class ShardingCtx:
+    mi: MeshInfo
+    act_specs: dict[str, P] = field(default_factory=dict)
+
+
+@contextlib.contextmanager
+def use_sharding(ctx: ShardingCtx | None):
+    tok = _CTX.set(ctx)
+    try:
+        yield
+    finally:
+        _CTX.reset(tok)
+
+
+def current_ctx() -> ShardingCtx | None:
+    return _CTX.get()
+
+
+def shard(x, name: str):
+    """Constrain activation ``x`` to the logical sharding ``name``."""
+    ctx = _CTX.get()
+    if ctx is None:
+        return x
+    spec = ctx.act_specs.get(name)
+    if spec is None:
+        return x
+    # Pad the spec with trailing None to the rank of x.
+    ps = tuple(spec) + (None,) * (x.ndim - len(spec))
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mi.mesh, P(*ps)))

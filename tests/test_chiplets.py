@@ -1,0 +1,68 @@
+"""Chiplet geometry + rotation semantics (paper §VI-A, Fig. 8)."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.chiplets import (COMPUTE, IO, MEMORY, Chiplet, LatencyParams,
+                                 heterogeneous_chiplet, homogeneous_chiplet,
+                                 paper_arch)
+
+
+def test_rotation_reanchors():
+    ch = Chiplet("t", COMPUTE, 2.0, 4.0, ((2.0, 1.0),), relay=True)
+    r = ch.rotated(1)
+    assert (r.w, r.h) == (4.0, 2.0)
+    # (x,y) -> (h-y, x): (2,1) -> (3,2)
+    assert r.phys == ((3.0, 2.0),)
+
+
+@given(st.floats(1.0, 10.0), st.floats(1.0, 10.0),
+       st.lists(st.tuples(st.floats(0, 1), st.floats(0, 1)), min_size=1,
+                max_size=4))
+@settings(max_examples=50, deadline=None)
+def test_rotation_four_times_is_identity(w, h, rel):
+    phys = tuple((round(x * w, 6), round(y * h, 6)) for x, y in rel)
+    ch = Chiplet("t", MEMORY, w, h, phys, relay=False)
+    r4 = ch.rotated(1).rotated(1).rotated(1).rotated(1)
+    assert math.isclose(r4.w, ch.w, abs_tol=1e-6)
+    for (a, b), (c, d) in zip(r4.phys, ch.phys):
+        assert math.isclose(a, c, abs_tol=1e-6)
+        assert math.isclose(b, d, abs_tol=1e-6)
+
+
+def test_rotation_classes():
+    # 4 PHYs mid-side, square: rotation-invariant -> only rotation 0
+    ch = homogeneous_chiplet(COMPUTE, "baseline")
+    assert ch.allowed_rotations() == (0,)
+    # single PHY south, square: all 4 rotations distinct
+    ch1 = homogeneous_chiplet(MEMORY, "baseline")
+    assert len(ch1.allowed_rotations()) == 4
+    # rectangle with centered PHYs on all sides: 180° symmetric (hybrid)
+    ch2 = Chiplet("h", MEMORY, 2.0, 4.0,
+                  ((1.0, 0.0), (1.0, 4.0), (0.0, 2.0), (2.0, 2.0)), True)
+    assert len(ch2.allowed_rotations()) == 2
+
+
+def test_paper_archs_counts():
+    for name, n in [("homog32", 40), ("homog64", 80), ("hetero32", 40),
+                    ("hetero64", 80)]:
+        arch = paper_arch(name, "baseline")
+        assert len(arch.chiplets) == n
+        c, m, i = arch.counts()
+        assert c in (32, 64) and m == i == c // 8
+
+
+def test_latency_params():
+    lp = LatencyParams()
+    assert lp.d2d_cost() == 25.0      # 2*12 + 1 (Table III)
+
+
+def test_baseline_vs_placeit_config():
+    mb = homogeneous_chiplet(MEMORY, "baseline")
+    mp = homogeneous_chiplet(MEMORY, "placeit")
+    assert mb.n_phys() == 1 and not mb.relay
+    assert mp.n_phys() == 4 and mp.relay
+    hb = heterogeneous_chiplet(IO, "baseline")
+    assert not hb.relay

@@ -1,0 +1,77 @@
+"""Dry-run machinery (reduced mesh, subprocess) + roofline math."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.configs import all_cells
+from repro.launch.roofline import (active_params, model_flops, roofline_row)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_all_cells_count():
+    assert len(all_cells()) == 32          # 10*3 + 2 long_500k
+
+
+def test_active_params_moe():
+    dense = active_params("qwen3-1.7b")
+    assert dense > 1.9e9
+    grok_total = 316e9
+    grok_active = active_params("grok-1-314b")
+    # top-2 of 8 experts: active well below total, above attention-only
+    assert 6e10 < grok_active < 1.2e11
+    moon = active_params("moonshot-v1-16b-a3b")
+    assert 2e9 < moon < 4.5e9              # "A3B"
+
+
+def test_model_flops_shapes():
+    t = model_flops("qwen3-1.7b", "train_4k")
+    p = model_flops("qwen3-1.7b", "prefill_32k")
+    d = model_flops("qwen3-1.7b", "decode_32k")
+    assert t == pytest.approx(6 * active_params("qwen3-1.7b") * 256 * 4096)
+    assert p == pytest.approx(2 * active_params("qwen3-1.7b") * 32 * 32768)
+    assert d == pytest.approx(2 * active_params("qwen3-1.7b") * 128)
+
+
+def test_roofline_row_math():
+    rec = {
+        "arch": "qwen3-1.7b", "shape": "decode_32k", "mesh": "single",
+        "n_chips": 256,
+        "flops_total": 197e12 * 0.001,          # 1 ms compute
+        "bytes_accessed_total": 819e9 * 0.004,  # 4 ms memory
+        "collectives": {"wire_bytes_per_chip": 50e9 * 0.002},
+        "memory_analysis": {"argument_size_in_bytes": int(8e9),
+                            "temp_size_in_bytes": int(2e9),
+                            "output_size_in_bytes": int(1e9),
+                            "alias_size_in_bytes": int(1e9)},
+    }
+    row = roofline_row(rec)
+    assert row["dominant"] == "memory"
+    assert row["t_memory_s"] == pytest.approx(0.004)
+    assert row["hbm_gb_per_chip"] == pytest.approx(10.0)
+    assert row["fits_16gb"]
+
+
+@pytest.mark.slow
+def test_dryrun_subprocess_small_mesh(tmp_path):
+    """The real dry-run driver on a reduced 2x4 mesh (8 host devices):
+    lower + compile + analyses for one full-config cell."""
+    env = dict(os.environ,
+               REPRO_DRYRUN_DEVICES="8",
+               REPRO_TEST_MESH="2x4",
+               PYTHONPATH=os.path.join(REPO, "src"))
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "seamless-m4t-medium", "--shape", "decode_32k",
+         "--mesh", "single", "--out", str(tmp_path)],
+        env=env, capture_output=True, text=True, timeout=900)
+    assert "[OK ]" in out.stdout, out.stdout + out.stderr
+    rec = json.load(open(
+        tmp_path / "seamless-m4t-medium__decode_32k__single.json"))
+    assert rec["ok"]
+    assert rec["flops_total"] > 0
+    assert rec["collectives"]["wire_bytes_per_chip"] >= 0
+    assert rec["memory_analysis"]["argument_size_in_bytes"] > 0

@@ -1,0 +1,142 @@
+"""Optimizers (§II-B) + packet simulator + traces + bridge."""
+import numpy as np
+import pytest
+
+from repro.core.baseline import MeshBaseline
+from repro.core.bridge import (TrafficSignature, codesign,
+                               weights_from_signature)
+from repro.core.chiplets import paper_arch
+from repro.core.netsim import ChipletNet, NetSim, Packet, synthetic_packets
+from repro.core.optimize import (Evaluator, best_random, genetic_algorithm,
+                                 simulated_annealing)
+from repro.core.placement_homog import HomogRep
+from repro.core.runner import Experiment, best_by_algorithm, summarize
+from repro.core.traces import TraceRegion, generate_trace, trace_stats
+
+
+@pytest.fixture(scope="module")
+def ev():
+    arch = paper_arch("homog32", "baseline")
+    rep = HomogRep(arch, R=8, C=5)
+    return Evaluator(rep, arch, rng=np.random.default_rng(0),
+                     norm_samples=12, chunk=4), arch
+
+
+def test_br_ga_sa_improve_over_single_random(ev):
+    ev_, arch = ev
+    rng = np.random.default_rng(1)
+    sols, graphs = ev_.generate_valid(ev_.rep.random, rng, 1)
+    c0, _ = ev_.costs(graphs)
+    br = best_random(ev_, np.random.default_rng(2), max_evals=24, batch=8)
+    ga = genetic_algorithm(ev_, np.random.default_rng(3), population=8,
+                           elitism=2, tournament=3, max_generations=3)
+    sa = simulated_annealing(ev_, np.random.default_rng(4), t0_temp=40.0,
+                             block_len=10, chains=4, max_iters=8)
+    for res in (br, ga, sa):
+        assert res.best_cost <= float(c0[0]) * 1.05
+        assert np.isfinite(res.best_cost)
+        assert res.best_sol is not None
+    # GA keeps population-many evaluations per generation
+    assert ga.n_evaluated >= 24
+
+
+def test_runner_and_baseline():
+    exp = Experiment("homog32", "baseline", algorithms=("br",),
+                     repetitions=1, max_evals=12, norm_samples=8)
+    recs = exp.run()
+    rows = summarize(recs)
+    assert rows and rows[0]["n_evaluated"] >= 12
+    bc, bm = exp.baseline_cost()
+    assert np.isfinite(bc)
+    best = best_by_algorithm(recs)
+    assert "br" in best
+
+
+# ---------------------------------------------------------------------------
+# netsim
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def net():
+    arch = paper_arch("homog32", "baseline")
+    mb = MeshBaseline(arch)
+    g, geo, links = mb.build()
+    return ChipletNet.from_links(arch, geo, links), arch
+
+
+def test_single_packet_latency_analytic(net):
+    n, arch = net
+    sim = NetSim(n, arch)
+    # one packet, no contention: latency = hops*(d2d+pipeline) + relays
+    src, dst = 8, 9
+    path = n.path(src, dst)
+    hops = len(path) - 1
+    res = sim.run([Packet(0, src, dst, flits=9, cycle=0)])
+    expect = hops * sim.hop_lat + (hops - 1) * sim.relay_lat + 9 - 1
+    assert res.avg_latency == pytest.approx(expect)
+
+
+def test_congestion_raises_latency(net):
+    n, arch = net
+    sim = NetSim(n, arch)
+    rng = np.random.default_rng(0)
+    lo = sim.run(synthetic_packets(n, "c2m", 0.002, 3000, rng))
+    rng = np.random.default_rng(0)
+    hi = sim.run(synthetic_packets(n, "c2m", 0.2, 3000, rng))
+    assert hi.avg_latency > lo.avg_latency
+
+
+def test_dependencies_enforced(net):
+    n, arch = net
+    sim = NetSim(n, arch)
+    pkts = [Packet(0, 0, 5, 1, cycle=100),
+            Packet(1, 5, 0, 9, cycle=0, deps=(0,))]
+    res = sim.run(pkts, mode="authentic")
+    p0 = next(p for p in pkts if p.pid == 0)
+    p1 = next(p for p in pkts if p.pid == 1)
+    assert p0.inject_t == 100
+    assert p1.inject_t >= p0.finish_t
+
+
+def test_idealized_faster_injection(net):
+    n, arch = net
+    pkts_a = generate_trace(n, (TraceRegion(400, 50_000),), seed=2)
+    sim = NetSim(n, arch)
+    res_a = sim.run(pkts_a, mode="authentic")
+    pkts_i = generate_trace(n, (TraceRegion(400, 50_000),), seed=2)
+    res_i = sim.run(pkts_i, mode="idealized")
+    assert res_i.makespan <= res_a.makespan
+
+
+def test_trace_mix_matches_paper(net):
+    n, arch = net
+    pkts = generate_trace(n, (TraceRegion(4000, 40_000),), seed=0)
+    st = trace_stats(pkts, n)
+    # §V-B measured mix: C2C 0-5%, C2M(+M2C) 80-95%, M2I(+I2M) 3-16%
+    assert st["c2c"] <= 0.05
+    assert 0.70 <= st["c2m"] + st["m2c"] <= 0.97
+    assert 0.02 <= st["m2i"] + st["i2m"] <= 0.20
+
+
+# ---------------------------------------------------------------------------
+# bridge
+# ---------------------------------------------------------------------------
+
+def test_weights_from_signature_shapes():
+    sig = TrafficSignature("x", "train_4k", "train", t_comp=1.0, t_mem=3.0,
+                           t_coll=1.0, io_share=0.1)
+    w = weights_from_signature(sig)
+    assert len(w["w_lat"]) == 4 and len(w["w_thr"]) == 4
+    # memory-heavy workload: c2m throughput weight dominates
+    assert w["w_thr"][1] == max(w["w_thr"])
+    total = sum(w["w_lat"]) + sum(w["w_thr"]) + w["w_area"]
+    assert total == pytest.approx(10.0, rel=0.05)
+
+
+def test_codesign_beats_baseline_smoke():
+    sig = TrafficSignature("tiny", "decode_32k", "decode", t_comp=0.1,
+                           t_mem=2.0, t_coll=0.5, io_share=0.1)
+    out = codesign(sig, max_evals=40, norm_samples=12)
+    assert np.isfinite(out["placeit_cost"])
+    assert out["placeit_cost"] <= out["baseline_cost"] * 1.2
+    assert out["package"]["n_memory"] >= 2

@@ -1,0 +1,144 @@
+"""Placement representation invariants (§V-A homog, §VI-A hetero).
+
+Property-based (hypothesis): chiplet-count conservation under mutate/merge,
+legal rotations only, corner placement produces no overlaps, isomorphism
+constraints (order by type, rotation classes).
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.chiplets import COMPUTE, IO, MEMORY, paper_arch
+from repro.core.placement_hetero import HeteroRep, corner_place
+from repro.core.placement_homog import HomogRep
+
+
+def counts_of(types):
+    return {k: int((types == k).sum()) for k in (COMPUTE, MEMORY, IO)}
+
+
+@pytest.fixture(scope="module")
+def homog():
+    return HomogRep(paper_arch("homog32", "baseline"), R=8, C=5)
+
+
+@pytest.fixture(scope="module")
+def hetero():
+    return HeteroRep(paper_arch("hetero32", "baseline"))
+
+
+# ---------------------------------------------------------------------------
+# homogeneous
+# ---------------------------------------------------------------------------
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=25, deadline=None)
+def test_homog_random_valid(seed):
+    rep = HomogRep(paper_arch("homog32", "baseline"), R=8, C=5)
+    rng = np.random.default_rng(seed)
+    types, rot = rep.random(rng)
+    assert counts_of(types) == {COMPUTE: 32, MEMORY: 4, IO: 4}
+    # compute chiplets (4 PHYs) never rotated
+    assert (rot[types == COMPUTE] == 0).all()
+
+
+@given(st.integers(0, 10_000),
+       st.sampled_from(["any-both", "any-one", "neighbor-both",
+                        "neighbor-one"]))
+@settings(max_examples=30, deadline=None)
+def test_homog_mutate_preserves_counts(seed, mode):
+    rep = HomogRep(paper_arch("homog32", "baseline"), R=8, C=5,
+                   mutation_mode=mode)
+    rng = np.random.default_rng(seed)
+    sol = rep.random(rng)
+    mut = rep.mutate(sol, rng)
+    assert counts_of(mut[0]) == counts_of(sol[0])
+    assert (mut[1][mut[0] == COMPUTE] == 0).all()
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=25, deadline=None)
+def test_homog_merge_carries_matches(seed):
+    rep = HomogRep(paper_arch("homog32", "baseline"), R=8, C=5)
+    rng = np.random.default_rng(seed)
+    a, b = rep.random(rng), rep.random(rng)
+    m = rep.merge(a, b, rng)
+    assert counts_of(m[0]) == counts_of(a[0])
+    match = a[0] == b[0]
+    assert (m[0][match] == a[0][match]).all()     # agreements carried over
+
+
+def test_homog_network_links_opposing_phys(homog, rng):
+    sol = homog.random(rng)
+    links, inst = homog.links_of(sol)
+    geo = homog.geometry(sol)
+    for p, q in links:
+        # linked PHYs belong to adjacent chiplets; distance == one pitch gap
+        a, b = geo.owner[p], geo.owner[q]
+        assert a != b
+        d = np.linalg.norm(geo.pos[p] - geo.pos[q])
+        assert d <= 3.0 + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# heterogeneous
+# ---------------------------------------------------------------------------
+
+@given(st.lists(st.tuples(st.sampled_from([2.0, 3.0, 4.0, 5.0]),
+                          st.sampled_from([2.0, 3.0, 4.0, 5.0])),
+                min_size=1, max_size=12))
+@settings(max_examples=60, deadline=None)
+def test_corner_place_no_overlap(dims):
+    pos = corner_place(dims)
+    n = len(dims)
+    for i in range(n):
+        for j in range(i + 1, n):
+            xi, yi = pos[i]
+            xj, yj = pos[j]
+            wi, hi = dims[i]
+            wj, hj = dims[j]
+            overlap = (xi < xj + wj - 1e-9 and xj < xi + wi - 1e-9 and
+                       yi < yj + hj - 1e-9 and yj < yi + hi - 1e-9)
+            assert not overlap, f"rect {i} overlaps {j}"
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=25, deadline=None)
+def test_hetero_random_valid(seed):
+    rep = HeteroRep(paper_arch("hetero32", "baseline"))
+    rng = np.random.default_rng(seed)
+    order, rots = rep.random(rng)
+    assert counts_of(order) == {COMPUTE: 32, MEMORY: 4, IO: 4}
+    for k, r in zip(order, rots):
+        assert r in rep._allowed_rot[int(k)]
+
+
+@given(st.integers(0, 10_000))
+@settings(max_examples=20, deadline=None)
+def test_hetero_mutate_merge_invariants(seed):
+    rep = HeteroRep(paper_arch("hetero32", "baseline"))
+    rng = np.random.default_rng(seed)
+    a, b = rep.random(rng), rep.random(rng)
+    m = rep.mutate(a, rng)
+    assert counts_of(m[0]) == counts_of(a[0])
+    g = rep.merge(a, b, rng)
+    assert counts_of(g[0]) == counts_of(a[0])
+    match = a[0] == b[0]
+    assert (g[0][match] == a[0][match]).all()
+    for k, r in zip(g[0], g[1]):
+        assert r in rep._allowed_rot[int(k)]
+
+
+def test_hetero_geometry_no_phy_outside(hetero, rng):
+    sol = hetero.random(rng)
+    pos, chips, inst = hetero.place(sol)
+    geo = hetero.geometry(sol)
+    # every PHY sits on its chiplet's bounding box
+    for p in range(geo.pos.shape[0]):
+        c = int(geo.owner[p])
+        k = int(np.nonzero(inst == c)[0][0])
+        x0, y0 = pos[k]
+        ch = chips[k]
+        x, y = geo.pos[p]
+        assert x0 - 1e-5 <= x <= x0 + ch.w + 1e-5
+        assert y0 - 1e-5 <= y <= y0 + ch.h + 1e-5

@@ -1,0 +1,151 @@
+"""Sharding rules validity on the FULL production configs + serving engine.
+
+The rules tests run against real (unreduced) configs — every PartitionSpec
+must divide its dimension on the 16x16 and 2x16x16 meshes.  This is the
+host-side contract the 512-device dry-run relies on.
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, SHAPES, eligible_shapes, get_config
+from repro.models.model import build_model, init_cache, init_params
+from repro.sharding import rules
+from repro.sharding.partition import MeshInfo
+
+
+class FakeMesh:
+    """Shape-only stand-in (no devices needed for divisibility checks)."""
+
+    def __init__(self, shape: dict):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+    @property
+    def size(self):
+        n = 1
+        for v in self.shape.values():
+            n *= v
+        return n
+
+
+MESHES = {
+    "single": FakeMesh({"data": 16, "model": 16}),
+    "multi": FakeMesh({"pod": 2, "data": 16, "model": 16}),
+}
+
+
+def axis_size(mesh, entry):
+    if entry is None:
+        return 1
+    axes = entry if isinstance(entry, tuple) else (entry,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def check_divisible(tree, specs, mesh, what):
+    from jax.sharding import PartitionSpec
+
+    is_spec = lambda x: isinstance(x, PartitionSpec)
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    spec_leaves = jax.tree_util.tree_flatten_with_path(
+        specs, is_leaf=is_spec)[0]
+    spec_map = {jax.tree_util.keystr(p): s for p, s in spec_leaves}
+    for path, leaf in leaves:
+        spec = spec_map[jax.tree_util.keystr(path)]
+        for d, entry in enumerate(tuple(spec)):
+            n = axis_size(mesh, entry)
+            assert leaf.shape[d] % n == 0, (
+                f"{what}{jax.tree_util.keystr(path)} dim {d} "
+                f"({leaf.shape[d]}) not divisible by {entry} ({n})")
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+@pytest.mark.parametrize("mesh_kind", ["single", "multi"])
+def test_param_pspecs_divide_full_configs(arch, mesh_kind):
+    from repro.launch.dryrun import prod_config
+
+    cfg, _ = prod_config(arch, "train_4k")
+    mesh = MESHES[mesh_kind]
+    dp = tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+    mi = MeshInfo(mesh=mesh, dp=dp, tp="model")
+    shapes = jax.eval_shape(
+        functools.partial(init_params, cfg), jax.random.PRNGKey(0))
+    specs = rules.param_pspecs(cfg, shapes, mi)
+    check_divisible(shapes, specs, mesh, f"{arch}/")
+    assert rules.unknown_leaves(cfg, shapes, mi) == []
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_cache_pspecs_divide(arch):
+    from repro.launch.dryrun import prod_config
+
+    for shape in eligible_shapes(arch):
+        if SHAPES[shape].kind != "decode":
+            continue
+        cfg, _ = prod_config(arch, shape)
+        sh = SHAPES[shape]
+        mesh = MESHES["single"]
+        dp = ("data",) if sh.global_batch > 1 else ()
+        tp = "model" if sh.global_batch > 1 else ("data", "model")
+        mi = MeshInfo(mesh=mesh, dp=dp, tp=tp)
+        mem_len = sh.seq_len if cfg.family == "encdec" else 0
+        cache = jax.eval_shape(lambda: init_cache(
+            cfg, sh.global_batch, sh.seq_len, mem_len=mem_len))
+        specs = rules.cache_pspecs(cfg, cache, mi, cache_len=sh.seq_len)
+        check_divisible(cache, specs, mesh, f"{arch}/{shape}/cache/")
+
+
+def test_batch_pspecs():
+    mi = MeshInfo(mesh=MESHES["multi"], dp=("pod", "data"), tp="model")
+    batch = {"tokens": jax.ShapeDtypeStruct((256, 4096), jnp.int32)}
+    specs = rules.batch_pspecs(batch, mi)
+    assert tuple(specs["tokens"])[0] == ("pod", "data")
+
+
+# ---------------------------------------------------------------------------
+# serving engine
+# ---------------------------------------------------------------------------
+
+def test_engine_serves_all_requests():
+    from repro.serve.engine import EngineConfig, Request, ServeEngine
+
+    cfg = get_config("qwen3-1.7b").reduced(n_layers=2)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(model, params,
+                      EngineConfig(n_slots=2, cache_len=64, eos=-1))
+    rng = np.random.default_rng(0)
+    reqs = [Request(i, rng.integers(3, cfg.vocab, size=5 + i)
+                    .astype(np.int32), max_tokens=4) for i in range(5)]
+    for r in reqs:
+        eng.submit(r)
+    eng.run()
+    assert all(r.done for r in reqs)
+    assert all(len(r.out_tokens) == 4 for r in reqs)
+
+
+def test_engine_greedy_matches_prefill_extension():
+    """Engine's token 2 == greedy next-token after re-prefilling with
+    (prompt + token 1): the KV-cache path is consistent."""
+    cfg = get_config("tinyllama-1.1b").reduced(n_layers=2)
+    from repro.serve.engine import EngineConfig, Request, ServeEngine
+
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    eng = ServeEngine(model, params,
+                      EngineConfig(n_slots=1, cache_len=64, eos=-1))
+    prompt = np.arange(3, 11, dtype=np.int32)
+    req = Request(0, prompt, max_tokens=3)
+    eng.submit(req)
+    eng.run()
+    t1, t2 = req.out_tokens[0], req.out_tokens[1]
+    logits, _ = jax.jit(lambda p, b: model.prefill(p, b, 64))(
+        params, {"tokens": jnp.asarray(
+            np.concatenate([prompt, [t1]])[None], jnp.int32)})
+    assert int(np.argmax(np.asarray(logits)[0])) == t2

@@ -1,0 +1,135 @@
+"""Topology inference (§VI-A MST + augmentation) and latency/throughput
+proxies (§IV-A) against brute-force oracles."""
+import heapq
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.chiplets import paper_arch
+from repro.core.placement_hetero import HeteroRep
+from repro.core.proxies import fw_counts_ref, layout_for, make_scorer
+from repro.core.topology import infer_links_mst
+
+
+def dijkstra(W, src):
+    V = W.shape[0]
+    dist = np.full(V, np.inf)
+    dist[src] = 0.0
+    pq = [(0.0, src)]
+    while pq:
+        d, u = heapq.heappop(pq)
+        if d > dist[u]:
+            continue
+        for v in range(V):
+            nd = d + W[u, v]
+            if nd < dist[v] - 1e-12:
+                dist[v] = nd
+                heapq.heappush(pq, (nd, v))
+    return dist
+
+
+def count_paths(W, D, src):
+    """Count shortest paths by DP over distance order."""
+    V = W.shape[0]
+    order = np.argsort(D[src])
+    cnt = np.zeros(V)
+    cnt[src] = 1
+    for v in order:
+        if v == src or not np.isfinite(D[src, v]):
+            continue
+        for u in range(V):
+            if np.isfinite(W[u, v]) and u != v \
+                    and abs(D[src, u] + W[u, v] - D[src, v]) < 1e-9:
+                cnt[v] += cnt[u]
+    return cnt
+
+
+@given(st.integers(0, 500))
+@settings(max_examples=15, deadline=None)
+def test_fw_counts_vs_dijkstra(seed):
+    rng = np.random.default_rng(seed)
+    V = 14
+    W = np.full((V, V), 1e9, np.float32)
+    np.fill_diagonal(W, 0)
+    for _ in range(26):
+        i, j = rng.integers(V, size=2)
+        if i != j:
+            w = float(rng.integers(1, 6))
+            W[i, j] = min(W[i, j], w)
+            W[j, i] = min(W[j, i], w)
+    D, N = fw_counts_ref(jnp.array(W))
+    D, N = np.array(D), np.array(N)
+    Winf = np.where(W >= 1e8, np.inf, W)
+    for s in range(V):
+        ds = dijkstra(Winf, s)
+        got = np.where(D[s] >= 1e8, np.inf, D[s])
+        np.testing.assert_allclose(got, ds, rtol=1e-5)
+        cs = count_paths(Winf, np.where(D >= 1e8, np.inf, D), s)
+        reach = np.isfinite(ds)
+        np.testing.assert_allclose(N[s][reach], cs[reach], rtol=1e-5)
+
+
+def test_mst_topology_properties(rng):
+    arch = paper_arch("hetero32", "baseline")
+    rep = HeteroRep(arch)
+    for seed in range(5):
+        r = np.random.default_rng(seed)
+        sol = rep.random(r)
+        geo = rep.geometry(sol)
+        links, connected = infer_links_mst(arch, geo)
+        # no link exceeds max length; no self-links
+        for p, q in links:
+            assert geo.owner[p] != geo.owner[q]
+            d = np.linalg.norm(geo.pos[p] - geo.pos[q])
+            assert d <= arch.max_link_mm + 1e-6
+        # augmentation never assigns >1 extra link to a used PHY:
+        # count PHY usage; MST may touch a PHY multiple times but
+        # augmented edges only join unused PHYs (checked structurally
+        # inside infer_links_mst; here: usage is finite + sane)
+        use = np.zeros(geo.pos.shape[0], int)
+        for p, q in links:
+            use[p] += 1
+            use[q] += 1
+        assert use.max() <= max(ch.n_phys() for ch in arch.chiplets) * 4
+
+
+def test_scorer_baseline_sanity(rng):
+    from repro.core.baseline import MeshBaseline
+
+    arch = paper_arch("homog32", "baseline")
+    mb = MeshBaseline(arch)
+    g, geo, links = mb.build()
+    scorer = make_scorer(mb.layout, chunk=1)
+    out = {k: np.asarray(v) for k, v in scorer(
+        dict(W=g.W[None], edges=g.edges[None], edge_mask=g.edge_mask[None],
+             area=np.array([g.area], np.float32))).items()}
+    # C2C latency on a mesh of 32 computes: avg hops > 1 -> > one-hop cost
+    one_hop = arch.latency.d2d_cost()
+    assert out["lat_c2c"][0] > one_hop
+    # all throughputs in (0, 1]
+    for t in ("c2c", "c2m", "c2i", "m2i"):
+        assert 0 < out[f"thr_{t}"][0] <= 1.0
+    # C2M latency smaller than C2I (memory is closer to compute than IO
+    # by construction of traffic endpoints? not guaranteed) — just finite:
+    assert np.isfinite(out["lat_c2m"][0])
+
+
+def test_pallas_fw_impl_in_scorer(rng):
+    """The Pallas FW kernel slots into the scorer and matches the ref."""
+    from repro.kernels.ops import fw_impl_pallas
+
+    arch = paper_arch("homog32", "baseline")
+    rep_h = HeteroRep(paper_arch("hetero32", "baseline"))
+    sol = rep_h.random(np.random.default_rng(0))
+    g = rep_h.score_graph(sol)
+    batch = dict(W=g.W[None], edges=g.edges[None],
+                 edge_mask=g.edge_mask[None],
+                 area=np.array([g.area], np.float32))
+    s_ref = make_scorer(rep_h.layout, chunk=1)
+    s_pal = make_scorer(rep_h.layout, fw_impl=fw_impl_pallas, chunk=1)
+    o1 = {k: np.asarray(v) for k, v in s_ref(batch).items()}
+    o2 = {k: np.asarray(v) for k, v in s_pal(batch).items()}
+    for k in o1:
+        np.testing.assert_allclose(o1[k], o2[k], rtol=1e-4, atol=1e-4)
