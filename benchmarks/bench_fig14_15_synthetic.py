@@ -13,27 +13,29 @@ import os
 
 import numpy as np
 
+from repro.core.api import (Budget, GAParams, make_evaluator, make_rep,
+                            paper_defaults)
 from repro.core.baseline import MeshBaseline
 from repro.core.chiplets import TRAFFIC_TYPES, paper_arch
-from repro.core.optimize import Evaluator, genetic_algorithm
-from repro.core.runner import GRID_DIMS, PAPER_PARAMS
-from repro.core.placement_homog import HomogRep
+from repro.core.registries import OPTIMIZERS
 
 from .common import budget, emit, out_dir
 
 
 def optimize_and_compare(arch_name: str, config: str, quick: bool) -> dict:
     arch = paper_arch(arch_name, config)
-    rep = HomogRep(arch, R=8, C=5, mutation_mode="neighbor-one")
+    rep = make_rep(arch, arch_name)
     rng = np.random.default_rng(0)
-    ev = Evaluator(rep, arch, rng=rng,
-                   norm_samples=budget(quick, 32, 500))
-    ga = PAPER_PARAMS[("homog", 32)]["ga"]
-    res = genetic_algorithm(
-        ev, rng, population=budget(quick, 24, ga["population"]),
-        elitism=budget(quick, 5, ga["elitism"]),
-        tournament=budget(quick, 5, ga["tournament"]),
-        max_generations=budget(quick, 8, 50))
+    ev = make_evaluator(rep, arch, rng=rng,
+                        norm_samples=budget(quick, 32, 500))
+    ga = paper_defaults(arch_name).ga
+    pop = budget(quick, 24, ga.population)
+    params = GAParams(population=pop,
+                      elitism=budget(quick, 5, ga.elitism),
+                      tournament=budget(quick, 5, ga.tournament),
+                      p_mutation=ga.p_mutation)
+    res = OPTIMIZERS.get("ga").fn(
+        ev, rng, Budget(evals=pop * budget(quick, 8, 50)), params)
     base = {k: float(v[0]) for k, v in ev.score(
         [MeshBaseline(arch).build()[0]]).items()}
     opt = res.best_metrics

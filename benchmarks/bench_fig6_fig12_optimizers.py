@@ -4,15 +4,17 @@ baseline, homogeneous (§V-B) and heterogeneous (§VI-B) architectures.
 Budgets are evaluation-count based (CPU-friendly stand-in for the paper's
 3600 s wall budget); the claims validated are the paper's *orderings*:
 every algorithm beats the baseline; GA/SA beat BR.
+
+Runs through the registry-driven API: one declarative ``ExperimentConfig``
+per architecture, executed with ``run_experiment``.
 """
 from __future__ import annotations
 
 import json
 import os
 
-import numpy as np
-
-from repro.core.runner import Experiment, best_by_algorithm, summarize
+from repro.core.api import (Budget, ExperimentConfig, baseline_cost,
+                            best_by_algorithm, run_experiment, summarize)
 
 from .common import budget, emit, out_dir
 
@@ -22,13 +24,14 @@ def run(quick: bool = True, archs=("homog32", "hetero32")) -> dict:
     reps = budget(quick, 2, 10)
     results = {}
     for arch_name in archs:
-        exp = Experiment(arch_name, "baseline",
-                         algorithms=("br", "ga", "sa"),
-                         repetitions=reps, max_evals=evals,
-                         norm_samples=budget(quick, 32, 500),
-                         sa_chains=budget(quick, 8, 1))
-        recs = exp.run()
-        base_cost, base_metrics = exp.baseline_cost()
+        cfg = ExperimentConfig(
+            arch=arch_name, config="baseline",
+            algorithms=("br", "ga", "sa"), repetitions=reps,
+            budget=Budget(evals=evals),
+            norm_samples=budget(quick, 32, 500),
+            params={"sa": {"chains": budget(quick, 8, 1)}})
+        recs = run_experiment(cfg)
+        base_cost, base_metrics = baseline_cost(cfg)
         best = best_by_algorithm(recs)
         fig = "fig6" if arch_name.startswith("homog") else "fig12"
         res = {"baseline_cost": base_cost}

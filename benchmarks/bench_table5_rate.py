@@ -4,7 +4,8 @@ The paper's CPU implementation evaluates one placement at a time (87.0k/17.3k
 homog, 8.5k/1.2k hetero per 3600 s).  Our TPU-native adaptation scores a
 whole batch per call (vmapped Floyd-Warshall).  This bench measures
 evaluations/second single vs batched — the beyond-paper speedup claimed in
-DESIGN.md §3 — plus the area deltas of §VII-E.
+DESIGN.md §3 — plus the area deltas of §VII-E, plus the sweep-level win:
+``run_sweep`` shares one jitted scorer across configs (no recompilation).
 """
 from __future__ import annotations
 
@@ -14,22 +15,25 @@ import time
 
 import numpy as np
 
+from repro.core.api import (Budget, ExperimentConfig, GAParams,
+                            clear_scorer_cache, make_evaluator, make_rep,
+                            run_sweep, scorer_cache_stats)
 from repro.core.baseline import MeshBaseline
 from repro.core.chiplets import paper_arch
-from repro.core.optimize import Evaluator, genetic_algorithm
-from repro.core.placement_hetero import HeteroRep
-from repro.core.placement_homog import HomogRep
+from repro.core.registries import OPTIMIZERS
 
 from .common import budget, emit, out_dir
 
 
-def eval_rate(rep, arch, chunk: int, n: int, quick: bool) -> float:
+def eval_rate(arch_name: str, chunk: int, n: int, quick: bool) -> float:
     """chunk == 1 measures the paper-style per-placement loop (one scoring
     call per placement, python dispatch included); chunk > 1 measures the
     TPU-native batched evaluation (one vmapped call per chunk)."""
+    arch = paper_arch(arch_name, "baseline")
+    rep = make_rep(arch, arch_name)
     rng = np.random.default_rng(0)
-    ev = Evaluator(rep, arch, rng=rng, norm_samples=max(chunk, 8),
-                   chunk=chunk)
+    ev = make_evaluator(rep, arch, rng=rng, norm_samples=max(chunk, 8),
+                        chunk=chunk)
     sols, graphs = ev.generate_valid(rep.random, rng, n)
     ev.costs(graphs[:chunk])          # warm the jit cache
     t0 = time.perf_counter()
@@ -45,14 +49,9 @@ def eval_rate(rep, arch, chunk: int, n: int, quick: bool) -> float:
 def run(quick: bool = True) -> dict:
     results = {}
     n = budget(quick, 48, 512)
-    for name, rep_f in (
-            ("homog32", lambda a: HomogRep(a, R=8, C=5)),
-            ("hetero32", lambda a: HeteroRep(a))):
-        arch = paper_arch(name, "baseline")
-        rep = rep_f(arch)
-        r1 = eval_rate(rep, arch, chunk=1, n=n, quick=quick)
-        rb = eval_rate(rep, arch, chunk=budget(quick, 16, 64), n=n,
-                       quick=quick)
+    for name in ("homog32", "hetero32"):
+        r1 = eval_rate(name, chunk=1, n=n, quick=quick)
+        rb = eval_rate(name, chunk=budget(quick, 16, 64), n=n, quick=quick)
         results[name] = dict(scalar_per_s=r1, batched_per_s=rb,
                              ratio=rb / r1)
         # paper Table V: 87.0k (homog32) / 8.5k (hetero32) BR placements
@@ -64,14 +63,37 @@ def run(quick: bool = True) -> dict:
              "CPU note: batching loses L2 locality on 1 core; the batched "
              "win is a TPU/VMEM property (Pallas FW kernel)")
 
+    # -- sweep-level amortization: one jitted scorer across configs --------
+    clear_scorer_cache()
+    sweep_cfgs = [
+        ExperimentConfig("homog32", algorithms=("sa",),
+                         repetitions=budget(quick, 2, 4),
+                         budget=Budget(evals=budget(quick, 16, 200)),
+                         norm_samples=8, seed=s)
+        for s in range(budget(quick, 2, 4))]
+    t0 = time.perf_counter()
+    sres = run_sweep(sweep_cfgs)
+    sweep_s = time.perf_counter() - t0
+    emit("table5_sweep_scorers_built", sres.stats.scorers_built,
+         f"{len(sweep_cfgs)} configs share 1 jitted scorer "
+         f"({sres.stats.n_evaluated} evals in {sweep_s:.1f}s, "
+         f"{sres.stats.n_evaluated / max(sweep_s, 1e-9):.1f}/s)")
+    results["sweep"] = dict(configs=len(sweep_cfgs),
+                            scorers_built=sres.stats.scorers_built,
+                            n_evaluated=sres.stats.n_evaluated,
+                            seconds=sweep_s,
+                            cache=scorer_cache_stats())
+
     # §VII-E area comparison (heterogeneous only; homogeneous is constant)
     arch = paper_arch("hetero32", "baseline")
-    rep = HeteroRep(arch)
+    rep = make_rep(arch, "hetero32")
     rng = np.random.default_rng(1)
-    ev = Evaluator(rep, arch, rng=rng, norm_samples=budget(quick, 24, 500))
-    res = genetic_algorithm(ev, rng, population=budget(quick, 16, 30),
-                            elitism=4, tournament=4,
-                            max_generations=budget(quick, 6, 40))
+    ev = make_evaluator(rep, arch, rng=rng,
+                        norm_samples=budget(quick, 24, 500))
+    ga = OPTIMIZERS.get("ga")
+    pop = budget(quick, 16, 30)
+    res = ga.fn(ev, rng, Budget(evals=pop * budget(quick, 6, 40)),
+                GAParams(population=pop, elitism=4, tournament=4))
     base_area = float(MeshBaseline(arch).build()[0].area)
     opt_area = float(res.best_metrics["area"])
     delta = (opt_area - base_area) / base_area

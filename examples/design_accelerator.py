@@ -16,9 +16,17 @@ from repro.core.bridge import (TrafficSignature, codesign,
 
 
 def main():
+    from repro.core.registries import OPTIMIZERS, SCORER_BACKENDS
+
     ap = argparse.ArgumentParser()
     ap.add_argument("--artifact", default=None)
     ap.add_argument("--evals", type=int, default=120)
+    ap.add_argument("--optimizer", default="ga",
+                    choices=OPTIMIZERS.names())
+    ap.add_argument("--backend", default="fw-ref",
+                    choices=SCORER_BACKENDS.names(),
+                    help="scorer backend (fw-pallas = Pallas min-plus "
+                         "kernel)")
     args = ap.parse_args()
 
     art = args.artifact
@@ -38,7 +46,8 @@ def main():
     print(f"  t_comp={sig.t_comp:.3g}s t_mem={sig.t_mem:.3g}s "
           f"t_coll={sig.t_coll:.3g}s io_share={sig.io_share:.2f}\n")
 
-    out = codesign(sig, max_evals=args.evals, norm_samples=24)
+    out = codesign(sig, max_evals=args.evals, norm_samples=24,
+                   optimizer=args.optimizer, backend=args.backend)
     print(f"package: {out['package']}")
     print(f"cost weights: {out['weights']}")
     print(f"PlaceIT cost  : {out['placeit_cost']:.3f}")

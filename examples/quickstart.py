@@ -1,14 +1,15 @@
 """Quickstart: co-optimize a chiplet placement + ICI topology (the paper's
-core loop) and compare it to the 2D-mesh baseline.
+core loop) and compare it to the 2D-mesh baseline — through the declarative
+experiment API.
 
   PYTHONPATH=src python examples/quickstart.py
-"""
-import numpy as np
 
-from repro.core.baseline import MeshBaseline
-from repro.core.chiplets import TYPE_NAMES, paper_arch
-from repro.core.optimize import Evaluator, genetic_algorithm
-from repro.core.placement_homog import HomogRep
+The whole experiment is one serializable config: swap ``"ga"`` for ``"sa"``
+or ``"br"``, change ``backend`` to ``"fw-pallas"`` to use the Pallas
+min-plus kernel, or dump ``cfg.to_json()`` into a sweep file.
+"""
+from repro.core.api import (Budget, ExperimentConfig, GAParams,
+                            baseline_cost, run_experiment)
 
 
 def ascii_placement(types) -> str:
@@ -18,18 +19,20 @@ def ascii_placement(types) -> str:
 
 
 def main():
-    arch = paper_arch("homog32", "baseline")   # 32C + 4M + 4I, 3x3mm
-    rep = HomogRep(arch, R=8, C=5, mutation_mode="neighbor-one")
-    rng = np.random.default_rng(0)
-
+    cfg = ExperimentConfig(
+        arch="homog32", config="baseline",      # 32C + 4M + 4I, 3x3mm
+        algorithms=("ga",),
+        budget=Budget(evals=240),
+        norm_samples=32,
+        params={"ga": GAParams(population=24, elitism=5, tournament=5)},
+    )
     print("== PlaceIT quickstart: homog32, GA, small budget ==")
-    ev = Evaluator(rep, arch, rng=rng, norm_samples=32)
-    res = genetic_algorithm(ev, rng, population=24, elitism=5, tournament=5,
-                            max_generations=10)
-    base_cost_graph = MeshBaseline(arch).build()[0]
-    base = {k: float(v[0]) for k, v in ev.score([base_cost_graph]).items()}
+    print(f"config: {cfg.to_json()}\n")
 
-    print(f"\noptimized placement (cost {res.best_cost:.3f}, "
+    res = run_experiment(cfg)[0].result
+    _, base = baseline_cost(cfg)
+
+    print(f"optimized placement (cost {res.best_cost:.3f}, "
           f"{res.n_evaluated} placements evaluated):")
     print(ascii_placement(res.best_sol[0]))
     print("\nmetric            placeit   2D-mesh   delta")

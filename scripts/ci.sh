@@ -1,0 +1,7 @@
+#!/usr/bin/env sh
+# Tier-1 CI: fast test pass (slow-marked tests excluded).
+#   scripts/ci.sh [extra pytest args...]
+set -eu
+cd "$(dirname "$0")/.."
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    exec python -m pytest -q -m "not slow" "$@"

@@ -1,3 +1,10 @@
 # The paper's primary contribution — implement the SYSTEM here
 # (scheduler, optimizer, data path, serving loop, etc.) in the
 # host framework. Add sibling subpackages for substrates.
+#
+# Public entry point: the registry-driven experiment API.
+from .api import (Budget, ExperimentConfig, RunRecord, SweepResult,  # noqa: F401
+                  baseline_cost, best_by_algorithm, run_experiment,
+                  run_sweep, summarize)
+from .registries import (OPTIMIZERS, SCORER_BACKENDS,  # noqa: F401
+                         register_optimizer, register_scorer_backend)

@@ -27,11 +27,12 @@ from dataclasses import dataclass
 
 import numpy as np
 
+from .api import Budget, GAParams, make_evaluator
 from .baseline import MeshBaseline
 from .chiplets import ArchSpec, LatencyParams, heterogeneous_arch
 from .cost import total_cost
-from .optimize import Evaluator, genetic_algorithm
 from .placement_hetero import HeteroRep
+from .registries import OPTIMIZERS
 
 PEAK_FLOPS = 197e12
 HBM_BW = 819e9
@@ -135,15 +136,23 @@ def tpu_like_package(sig: TrafficSignature, *, n_compute: int = 8,
 
 
 def codesign(sig: TrafficSignature, *, seed: int = 0, max_evals: int = 300,
-             norm_samples: int = 64) -> dict:
-    """Run the co-optimization for the workload; compare to mesh baseline."""
+             norm_samples: int = 64, optimizer: str = "ga",
+             backend: str = "fw-ref", params=None) -> dict:
+    """Run the co-optimization for the workload; compare to mesh baseline.
+
+    ``optimizer``/``backend`` name entries in the registries, so a custom
+    search algorithm or the Pallas scorer kernel are one string away.
+    """
     arch = tpu_like_package(sig)
     rng = np.random.default_rng(seed)
     rep = HeteroRep(arch, mutation_mode="any-one")
-    ev = Evaluator(rep, arch, rng=rng, norm_samples=norm_samples)
-    res = genetic_algorithm(
-        ev, rng, population=20, elitism=4, tournament=4,
-        max_generations=max(1, max_evals // 20))
+    ev = make_evaluator(rep, arch, rng=rng, norm_samples=norm_samples,
+                        backend=backend)
+    entry = OPTIMIZERS.get(optimizer)
+    if params is None:
+        params = (GAParams(population=20, elitism=4, tournament=4)
+                  if optimizer == "ga" else entry.params_cls())
+    res = entry.fn(ev, rng, Budget(evals=max_evals), params)
     base_graph = MeshBaseline(arch).build()[0]
     base_metrics = ev.score([base_graph])
     base_cost = float(np.asarray(

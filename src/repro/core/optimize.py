@@ -39,13 +39,18 @@ class Evaluator:
     """rep + scorer + cost normalizers -> batched get_cost()."""
 
     def __init__(self, rep, arch, *, rng: np.random.Generator,
-                 norm_samples: int = 500, chunk: int = 16, fw_impl=None):
+                 norm_samples: int = 500, chunk: int = 16, fw_impl=None,
+                 scorer=None):
         self.rep = rep
         self.arch = arch
-        kw = {"chunk": chunk}
-        if fw_impl is not None:
-            kw["fw_impl"] = fw_impl
-        self.scorer = make_scorer(rep.layout, **kw)
+        if scorer is not None:
+            # Pre-built (usually cached) jitted scorer — see api.get_scorer.
+            self.scorer = scorer
+        else:
+            kw = {"chunk": chunk}
+            if fw_impl is not None:
+                kw["fw_impl"] = fw_impl
+            self.scorer = make_scorer(rep.layout, **kw)
         self.n_generated = 0
         sols, graphs = self.generate_valid(
             lambda r: self.rep.random(r), rng, norm_samples)

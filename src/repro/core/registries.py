@@ -1,0 +1,94 @@
+"""Named registries for the experiment API (optimizers, scorer backends).
+
+The PlaceIT pipeline is pluggable at two seams:
+
+* **optimizers** — search algorithms over a placement representation, all
+  with the uniform signature ``(evaluator, rng, budget, params) -> OptResult``
+  plus a typed params dataclass (``api.BRParams`` etc.).
+* **scorer backends** — the Floyd-Warshall ``W -> (D, Ncnt)`` implementation
+  that dominates evaluation time (paper Table V): the pure-XLA reference or
+  the Pallas VMEM-resident kernel, selected by name (``"fw-ref"``,
+  ``"fw-pallas"``).
+
+Entries are registered with decorators::
+
+    @register_optimizer("tabu", params_cls=TabuParams)
+    def tabu(evaluator, rng, budget, params): ...
+
+    @register_scorer_backend("fw-mine")
+    def _build():            # zero-arg factory -> fw_impl callable
+        return my_fw_impl
+
+Backends are registered as zero-arg *factories* so optional dependencies
+(e.g. Pallas) are only imported when the backend is actually selected.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+
+class Registry:
+    """A named, typo-friendly mapping used for all pluggable seams."""
+
+    def __init__(self, kind: str):
+        self.kind = kind
+        self._items: dict[str, Any] = {}
+
+    def add(self, name: str, obj: Any) -> Any:
+        if name in self._items:
+            raise ValueError(f"duplicate {self.kind} {name!r}")
+        self._items[name] = obj
+        return obj
+
+    def get(self, name: str) -> Any:
+        try:
+            return self._items[name]
+        except KeyError:
+            raise KeyError(
+                f"unknown {self.kind} {name!r}; registered: "
+                f"{', '.join(sorted(self._items)) or '(none)'}") from None
+
+    def names(self) -> tuple[str, ...]:
+        return tuple(sorted(self._items))
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._items
+
+
+@dataclass(frozen=True)
+class OptimizerEntry:
+    name: str
+    fn: Callable            # (evaluator, rng, budget, params) -> OptResult
+    params_cls: type        # typed hyper-parameter dataclass
+
+
+OPTIMIZERS = Registry("optimizer")
+SCORER_BACKENDS = Registry("scorer backend")
+
+
+def register_optimizer(name: str, *, params_cls: type):
+    """Decorator: register ``fn(evaluator, rng, budget, params)`` under
+    ``name`` with its typed params dataclass."""
+    def deco(fn):
+        OPTIMIZERS.add(name, OptimizerEntry(name, fn, params_cls))
+        return fn
+    return deco
+
+
+def register_scorer_backend(name: str):
+    """Decorator: register a zero-arg factory returning the fw_impl
+    callable ``W -> (D, Ncnt)`` under ``name``."""
+    def deco(factory):
+        SCORER_BACKENDS.add(name, factory)
+        return factory
+    return deco
+
+
+def resolve_backend(backend) -> Callable:
+    """Resolve a backend name (or pass through a raw callable) to the
+    fw_impl function.  Raw callables are allowed for the legacy
+    ``Experiment.fw_impl`` shim and for experimentation."""
+    if callable(backend):
+        return backend
+    return SCORER_BACKENDS.get(backend)()

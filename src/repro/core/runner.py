@@ -1,67 +1,34 @@
-"""Experiment runner (paper Fig. 3): launch BR/GA/SA runs over architectures.
+"""DEPRECATED experiment runner — thin shim over :mod:`repro.core.api`.
 
-The runner wires together: architecture spec -> placement representation ->
-evaluator (batched JAX scoring + cost normalizers) -> optimization algorithm,
-with repetitions, and scores the 2D-mesh baseline with the *same* normalizers
-so the comparison matches the paper's (§VII).
+The old monolithic ``Experiment`` dataclass (string-keyed ``if/elif``
+dispatch, raw ``PAPER_PARAMS`` dicts, opaque ``fw_impl`` hook) has been
+replaced by the registry-driven API:
 
-Budgets are expressed in evaluations by default (deterministic, CI-friendly);
-wall-clock budgets — the paper's 3600 s — are also supported.
+* :class:`repro.core.api.ExperimentConfig` + :func:`repro.core.api.run_experiment`
+* ``@register_optimizer`` / ``@register_scorer_backend`` for new algorithms
+  and scorer backends
+* :func:`repro.core.api.run_sweep` for batched multi-config runs
+
+``Experiment`` remains as a deprecated compatibility wrapper that builds an
+``ExperimentConfig`` and delegates; it will be removed once downstream
+callers migrate (see ROADMAP).
 """
 from __future__ import annotations
 
-import dataclasses
-import time
+import warnings
 from dataclasses import dataclass, field
 from typing import Any
 
-import numpy as np
-
-from .baseline import MeshBaseline
-from .chiplets import ArchSpec, paper_arch
-from .cost import total_cost
-from .optimize import (Evaluator, OptResult, best_random, genetic_algorithm,
-                       simulated_annealing)
-from .placement_hetero import HeteroRep
-from .placement_homog import HomogRep
-
-# Paper Table III/IV hyper-parameters per (arch family, size).
-PAPER_PARAMS = {
-    ("homog", 32): dict(ga=dict(population=200, elitism=30, tournament=30,
-                                p_mutation=0.5),
-                        sa=dict(t0_temp=40.0, block_len=250),
-                        mutation_mode="neighbor-one"),
-    ("homog", 64): dict(ga=dict(population=50, elitism=8, tournament=8,
-                                p_mutation=0.5),
-                        sa=dict(t0_temp=35.0, block_len=50),
-                        mutation_mode="neighbor-one"),
-    ("hetero", 32): dict(ga=dict(population=30, elitism=6, tournament=6,
-                                 p_mutation=0.5),
-                         sa=dict(t0_temp=33.0, block_len=50),
-                         mutation_mode="any-one"),
-    ("hetero", 64): dict(ga=dict(population=20, elitism=5, tournament=5,
-                                 p_mutation=0.5),
-                         sa=dict(t0_temp=28.0, block_len=45),
-                         mutation_mode="any-one"),
-}
-
-# Paper §V-B grid sizes: R*C >= N with one spare row of slack.
-GRID_DIMS = {32 + 4 + 4: (8, 5), 64 + 8 + 8: (10, 8)}
-
-
-@dataclass
-class RunRecord:
-    arch: str
-    config: str
-    algorithm: str
-    repetition: int
-    result: OptResult
-    seconds: float
+# Re-exported for backwards compatibility.
+from .api import (GRID_DIMS, Budget, ExperimentConfig, RunRecord,  # noqa: F401
+                  baseline_cost, best_by_algorithm, make_rep,
+                  run_experiment, summarize)
+from .chiplets import ArchSpec
 
 
 @dataclass
 class Experiment:
-    """One experiment = one architecture x chiplet config, several algos."""
+    """Deprecated: use ``ExperimentConfig`` + ``run_experiment``."""
 
     arch_name: str                     # homog32 | homog64 | hetero32 | hetero64
     config: str = "baseline"           # baseline | placeit (§VII)
@@ -72,90 +39,34 @@ class Experiment:
     norm_samples: int = 100            # paper: 500
     seed: int = 0
     sa_chains: int = 1
-    fw_impl: Any = None                # plug in the Pallas APSP here
+    fw_impl: Any = None                # legacy hook; prefer config.backend
     records: list[RunRecord] = field(default_factory=list)
 
+    def to_config(self) -> ExperimentConfig:
+        params = {}
+        if self.sa_chains != 1:
+            params["sa"] = {"chains": self.sa_chains}
+        return ExperimentConfig(
+            arch=self.arch_name, config=self.config,
+            algorithms=tuple(self.algorithms), repetitions=self.repetitions,
+            budget=Budget(evals=self.max_evals, seconds=self.time_budget_s),
+            norm_samples=self.norm_samples, seed=self.seed, params=params)
+
+    def _warn(self):
+        warnings.warn(
+            "Experiment is deprecated; use repro.core.api.ExperimentConfig "
+            "with run_experiment()/run_sweep()", DeprecationWarning,
+            stacklevel=3)
+
     def make_rep(self, arch: ArchSpec):
-        fam = "homog" if self.arch_name.startswith("homog") else "hetero"
-        size = 32 if "32" in self.arch_name else 64
-        mode = PAPER_PARAMS[(fam, size)]["mutation_mode"]
-        if fam == "homog":
-            n = len(arch.chiplets)
-            R, C = GRID_DIMS.get(n, (int(np.ceil(np.sqrt(n))),) * 2)
-            return HomogRep(arch, R=R, C=C, mutation_mode=mode)
-        return HeteroRep(arch, mutation_mode=mode)
+        return make_rep(arch, self.arch_name)
 
     def run(self) -> list[RunRecord]:
-        arch = paper_arch(self.arch_name, self.config)
-        fam = "homog" if self.arch_name.startswith("homog") else "hetero"
-        size = 32 if "32" in self.arch_name else 64
-        params = PAPER_PARAMS[(fam, size)]
-        for rep_i in range(self.repetitions):
-            rng = np.random.default_rng(self.seed + 1000 * rep_i)
-            rep = self.make_rep(arch)
-            ev = Evaluator(rep, arch, rng=rng, norm_samples=self.norm_samples,
-                           fw_impl=self.fw_impl)
-            for algo in self.algorithms:
-                t0 = time.monotonic()
-                rng_a = np.random.default_rng(
-                    self.seed + 1000 * rep_i + hash(algo) % 997)
-                if algo == "br":
-                    res = best_random(ev, rng_a, max_evals=self.max_evals,
-                                      time_budget_s=self.time_budget_s)
-                elif algo == "ga":
-                    ga = params["ga"]
-                    max_gen = (None if self.max_evals is None
-                               else max(1, self.max_evals // ga["population"]))
-                    res = genetic_algorithm(
-                        ev, rng_a, time_budget_s=self.time_budget_s,
-                        max_generations=max_gen, **ga)
-                elif algo == "sa":
-                    sa = params["sa"]
-                    max_it = (None if self.max_evals is None
-                              else max(1, self.max_evals // self.sa_chains))
-                    res = simulated_annealing(
-                        ev, rng_a, chains=self.sa_chains,
-                        time_budget_s=self.time_budget_s, max_iters=max_it,
-                        **sa)
-                else:  # pragma: no cover
-                    raise ValueError(algo)
-                self.records.append(RunRecord(
-                    self.arch_name, self.config, algo, rep_i, res,
-                    time.monotonic() - t0))
+        self._warn()
+        self.records.extend(
+            run_experiment(self.to_config(), fw_impl=self.fw_impl))
         return self.records
 
-    # -- baseline scored with the same pipeline ---------------------------
     def baseline_cost(self) -> tuple[float, dict]:
-        arch = paper_arch(self.arch_name, self.config)
-        rng = np.random.default_rng(self.seed)
-        rep = self.make_rep(arch)
-        ev = Evaluator(rep, arch, rng=rng, norm_samples=self.norm_samples,
-                       fw_impl=self.fw_impl)
-        g = MeshBaseline(arch).build()[0]
-        # Pad the baseline graph's edge list to the rep's fixed shape if
-        # needed (shapes differ between baseline and placement graphs).
-        metrics = ev.score([g])
-        cost = float(np.asarray(total_cost(metrics, arch, ev.norm))[0])
-        return cost, {k: float(v[0]) for k, v in metrics.items()}
-
-
-def summarize(records: list[RunRecord]) -> list[dict]:
-    rows = []
-    for r in records:
-        rows.append(dict(
-            arch=r.arch, config=r.config, algorithm=r.algorithm,
-            repetition=r.repetition, best_cost=r.result.best_cost,
-            n_evaluated=r.result.n_evaluated,
-            n_generated=r.result.n_generated, seconds=round(r.seconds, 2),
-            evals_per_s=round(r.result.n_evaluated / max(r.seconds, 1e-9), 1),
-        ))
-    return rows
-
-
-def best_by_algorithm(records: list[RunRecord]) -> dict[str, RunRecord]:
-    out: dict[str, RunRecord] = {}
-    for r in records:
-        if r.algorithm not in out \
-                or r.result.best_cost < out[r.algorithm].result.best_cost:
-            out[r.algorithm] = r
-    return out
+        self._warn()
+        return baseline_cost(self.to_config(), fw_impl=self.fw_impl)

@@ -1,0 +1,12 @@
+"""Version compatibility for Pallas TPU APIs.
+
+jax < 0.5 spells the Mosaic compiler-params class ``TPUCompilerParams``;
+newer jax uses ``CompilerParams``.  Kernel modules import the alias from
+here instead of monkey-patching the jax module globally.
+"""
+from __future__ import annotations
+
+import jax.experimental.pallas.tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or pltpu.TPUCompilerParams

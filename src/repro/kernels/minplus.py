@@ -30,6 +30,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from . import _compat
+
 INF_CUT = 1.0e8
 _COUNT_CLIP = 1.0e30
 
@@ -93,7 +95,7 @@ def fw_counts_pallas(W: jnp.ndarray, *, interpret: bool = True
                    pl.BlockSpec((1, Vp, Vp), lambda b: (b, 0, 0))],
         out_shape=[jax.ShapeDtypeStruct((B, Vp, Vp), W.dtype),
                    jax.ShapeDtypeStruct((B, Vp, Vp), W.dtype)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_compat.CompilerParams(
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(W)
@@ -143,7 +145,7 @@ def minplus_tiled_pallas(A: jnp.ndarray, B: jnp.ndarray, *,
                   pl.BlockSpec((bk, bn), lambda i, j, k: (k, j))],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((Mp, Np), A.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_compat.CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(Ap, Bp)

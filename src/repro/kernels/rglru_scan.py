@@ -15,6 +15,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from . import _compat
+
 
 def _rglru_kernel(a_ref, x_ref, h0_ref, y_ref, hf_ref, h_scr, *, S: int):
     # Blocks: a/x/y (1, bd, S); h0/hf (1, bd); scratch (1, bd) fp32.
@@ -66,7 +68,7 @@ def rglru_scan_pallas(x: jnp.ndarray, a: jnp.ndarray,
         out_shape=[jax.ShapeDtypeStruct((B, Dp, S), x.dtype),
                    jax.ShapeDtypeStruct((B, Dp), jnp.float32)],
         scratch_shapes=[pltpu.VMEM((1, bd_), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_compat.CompilerParams(
             dimension_semantics=("parallel", "parallel")),
         interpret=interpret,
     )(at, xt, h0)

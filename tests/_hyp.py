@@ -1,0 +1,32 @@
+"""Optional-hypothesis shim.
+
+``hypothesis`` is not part of the pinned environment.  Importing it at
+module level made four test modules fail *collection*, taking their
+non-property tests down with them.  Import ``given``/``settings``/``st``
+from here instead: with hypothesis installed they are the real thing;
+without it, ``@given`` tests are individually skipped and everything else
+in the module still collects and runs.
+"""
+from __future__ import annotations
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    class _DummyStrategies:
+        """st.<anything>(...) -> None; only used as decorator arguments."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _DummyStrategies()
+
+    def given(*_a, **_k):
+        return pytest.mark.skip(reason="hypothesis not installed")
+
+    def settings(*_a, **_k):
+        return lambda f: f

@@ -1,0 +1,247 @@
+"""Registry-driven experiment API: serialization round-trips, registry
+dispatch equivalence with the legacy runner loop, error paths, and
+sweep-level scorer sharing."""
+import dataclasses
+import warnings
+import zlib
+
+import numpy as np
+import pytest
+
+from repro.core import api
+from repro.core.api import (Budget, ExperimentConfig, GAParams, SAParams,
+                            algo_seed, baseline_cost, clear_scorer_cache,
+                            run_experiment, run_sweep, scorer_cache_stats)
+from repro.core.chiplets import paper_arch
+from repro.core.optimize import (Evaluator, best_random, genetic_algorithm,
+                                 simulated_annealing)
+from repro.core.placement_homog import HomogRep
+from repro.core.registries import (OPTIMIZERS, SCORER_BACKENDS, Registry,
+                                   register_optimizer, resolve_backend)
+from repro.core.runner import Experiment
+
+ARCH = "homog32"
+
+
+def fast_cfg(**kw):
+    base = dict(arch=ARCH, algorithms=("br",), budget=Budget(evals=8),
+                norm_samples=8, chunk=4)
+    base.update(kw)
+    return ExperimentConfig(**base)
+
+
+# ---------------------------------------------------------------------------
+# Config serialization.
+# ---------------------------------------------------------------------------
+
+def test_config_roundtrip_dict_json():
+    cfg = ExperimentConfig(
+        arch="hetero32", config="placeit", algorithms=("sa", "ga"),
+        repetitions=3, budget=Budget(evals=100, seconds=12.5),
+        norm_samples=16, seed=7, backend="fw-pallas", chunk=8,
+        params={"sa": {"chains": 4}, "ga": GAParams(population=10,
+                                                    elitism=2,
+                                                    tournament=2)})
+    assert ExperimentConfig.from_dict(cfg.to_dict()) == cfg
+    assert ExperimentConfig.from_json(cfg.to_json()) == cfg
+    # params are normalized to typed dataclasses with paper defaults filled
+    sa = cfg.resolved_params("sa")
+    assert isinstance(sa, SAParams)
+    assert sa.chains == 4
+    assert sa.t0_temp == 33.0          # hetero32 paper default retained
+
+
+def test_config_params_fall_back_to_paper_defaults():
+    cfg = ExperimentConfig(arch="homog32")
+    ga = cfg.resolved_params("ga")
+    assert (ga.population, ga.elitism, ga.tournament) == (200, 30, 30)
+    assert cfg.resolved_params("sa").block_len == 250
+
+
+def test_budget_validation_and_scaling():
+    with pytest.raises(ValueError):
+        Budget(evals=None, seconds=None)
+    assert Budget(evals=10).scaled(3).evals == 30
+    assert Budget(seconds=5.0, evals=None).scaled(3).seconds == 5.0
+    # default eval cap applies only when no wall budget is given
+    assert Budget().evals == 300
+    assert Budget(seconds=3600.0).evals is None
+    assert Budget.from_dict({"seconds": 3600.0}) == Budget(seconds=3600.0)
+
+
+def test_config_is_hashable_consistently_with_eq():
+    a = ExperimentConfig(arch=ARCH, params={"sa": {"chains": 2}})
+    b = ExperimentConfig.from_dict(a.to_dict())
+    assert a == b and hash(a) == hash(b)
+    assert len({a, b}) == 1
+
+
+# ---------------------------------------------------------------------------
+# Error paths.
+# ---------------------------------------------------------------------------
+
+def test_unknown_names_raise():
+    with pytest.raises(KeyError, match="unknown optimizer 'nope'"):
+        run_experiment(fast_cfg(algorithms=("nope",)))
+    with pytest.raises(KeyError, match="unknown optimizer"):
+        ExperimentConfig(arch=ARCH, params={"nope": {"x": 1}})
+    with pytest.raises(KeyError, match="unknown scorer backend"):
+        resolve_backend("no-such-backend")
+    with pytest.raises(ValueError, match="unknown ExperimentConfig keys"):
+        ExperimentConfig.from_dict({"arch": ARCH, "bogus": 1})
+    with pytest.raises(TypeError):
+        ExperimentConfig(arch=ARCH, params={"sa": {"not_a_field": 1}})
+
+
+def test_registry_basics():
+    r = Registry("thing")
+    r.add("a", 1)
+    with pytest.raises(ValueError, match="duplicate thing 'a'"):
+        r.add("a", 2)
+    assert "a" in r and r.get("a") == 1
+    assert set(OPTIMIZERS.names()) >= {"br", "ga", "sa"}
+    assert set(SCORER_BACKENDS.names()) >= {"fw-ref", "fw-pallas"}
+
+
+def test_custom_optimizer_is_drop_in():
+    if "first-valid" not in OPTIMIZERS:
+        @dataclasses.dataclass(frozen=True)
+        class FVParams:
+            n: int = 2
+
+        @register_optimizer("first-valid", params_cls=FVParams)
+        def _first_valid(ev, rng, budget, params):
+            sols, graphs = ev.generate_valid(ev.rep.random, rng, params.n)
+            costs, metrics = ev.costs(graphs)
+            i = int(np.argmin(costs))
+            from repro.core.optimize import OptResult
+            res = OptResult(sols[i], float(costs[i]),
+                            {k: float(v[i]) for k, v in metrics.items()})
+            res.n_evaluated = params.n
+            return res
+
+    recs = run_experiment(fast_cfg(algorithms=("first-valid",)))
+    assert recs[0].algorithm == "first-valid"
+    assert np.isfinite(recs[0].result.best_cost)
+    assert recs[0].result.n_evaluated == 2
+
+
+# ---------------------------------------------------------------------------
+# Dispatch equivalence: run_experiment == the legacy Experiment.run loop.
+# ---------------------------------------------------------------------------
+
+def _costs(history):
+    return [(n, c) for _, n, c in history]
+
+
+def test_run_experiment_matches_legacy_loop_bit_for_bit():
+    seed, evals, reps = 3, 24, 2
+    cfg = ExperimentConfig(
+        arch=ARCH, algorithms=("br", "ga", "sa"), repetitions=reps,
+        budget=Budget(evals=evals), norm_samples=8, seed=seed,
+        params={"ga": {"population": 8, "elitism": 2, "tournament": 3},
+                "sa": {"chains": 2}})
+    recs = run_experiment(cfg)
+
+    # The legacy Experiment.run body, written out by hand.
+    arch = paper_arch(ARCH, "baseline")
+    legacy = []
+    for rep_i in range(reps):
+        rng = np.random.default_rng(seed + 1000 * rep_i)
+        rep = HomogRep(arch, R=8, C=5, mutation_mode="neighbor-one")
+        ev = Evaluator(rep, arch, rng=rng, norm_samples=8)
+        for algo in ("br", "ga", "sa"):
+            rng_a = np.random.default_rng(
+                seed + 1000 * rep_i + zlib.crc32(algo.encode()) % 997)
+            if algo == "br":
+                res = best_random(ev, rng_a, max_evals=evals)
+            elif algo == "ga":
+                res = genetic_algorithm(ev, rng_a, population=8, elitism=2,
+                                        tournament=3,
+                                        max_generations=evals // 8)
+            else:
+                res = simulated_annealing(ev, rng_a, t0_temp=40.0,
+                                          block_len=250, chains=2,
+                                          max_iters=evals // 2)
+            legacy.append(res)
+
+    assert len(recs) == len(legacy) == reps * 3
+    for got, want in zip(recs, legacy):
+        assert got.result.best_cost == want.best_cost
+        assert got.result.n_evaluated == want.n_evaluated
+        assert _costs(got.result.history) == _costs(want.history)
+
+
+def test_deprecated_experiment_shim_delegates():
+    with pytest.warns(DeprecationWarning):
+        exp = Experiment(ARCH, algorithms=("br",), max_evals=8,
+                         norm_samples=8, seed=5)
+        recs = exp.run()
+    new = run_experiment(fast_cfg(chunk=16, seed=5))
+    assert recs[0].result.best_cost == new[0].result.best_cost
+    with pytest.warns(DeprecationWarning):
+        bc, bm = exp.baseline_cost()
+    bc2, bm2 = baseline_cost(fast_cfg(chunk=16, seed=5))
+    assert bc == bc2 and bm == bm2
+
+
+def test_algo_seed_is_processes_stable():
+    # frozen values: any change here breaks cross-process reproducibility
+    assert algo_seed(0, 0, "br") == zlib.crc32(b"br") % 997
+    assert algo_seed(3, 2, "sa") == 3 + 2000 + zlib.crc32(b"sa") % 997
+
+
+# ---------------------------------------------------------------------------
+# Backends.
+# ---------------------------------------------------------------------------
+
+def test_named_backends_agree():
+    ref = run_experiment(fast_cfg(backend="fw-ref"))
+    pal = run_experiment(fast_cfg(backend="fw-pallas"))
+    assert ref[0].result.best_cost == pytest.approx(
+        pal[0].result.best_cost, rel=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Sweeps: one jitted scorer across configs.
+# ---------------------------------------------------------------------------
+
+def test_sweep_reuses_single_jitted_scorer():
+    clear_scorer_cache()
+    cfgs = [fast_cfg(seed=s, budget=Budget(evals=6)) for s in (0, 1, 2)]
+    res = run_sweep(cfgs)
+    stats = scorer_cache_stats()
+    # one compilation for three configs; the rest are cache hits
+    assert res.stats.scorers_built == 1
+    assert stats["misses"] == 1 and stats["hits"] >= 2
+    assert len(res.runs) == 3 and res.stats.n_evaluated > 0
+    # per-config results match standalone runs (repetitions == 1)
+    for cfg, run in zip(cfgs, res.runs):
+        solo = run_experiment(cfg)
+        assert [r.result.best_cost for r in run.records] \
+            == [r.result.best_cost for r in solo]
+
+
+def test_sweep_folds_sa_repetitions_into_chains():
+    cfg = fast_cfg(algorithms=("sa",), repetitions=3,
+                   budget=Budget(evals=6), params={"sa": {"chains": 2}})
+    res = run_sweep([cfg])
+    (rec,) = res.records
+    assert rec.repetition == -1           # folded batch record
+    # 3 reps x 2 chains -> 6 chains, same per-chain iteration count:
+    # initial batch (6) + (6*3 evals // 6 chains) iterations * 6 chains
+    assert rec.result.n_evaluated == 6 + (6 * 3 // 6) * 6
+    unfolded = run_sweep([cfg], fold_repetitions=False)
+    assert len(unfolded.records) == 3
+    assert {r.repetition for r in unfolded.records} == {0, 1, 2}
+    # shared evaluator, but n_generated is a per-run delta, not cumulative
+    for r in unfolded.records:
+        assert 0 < r.result.n_generated < unfolded.records[0].result.n_generated * 3
+
+
+def test_sweep_never_folds_wall_clock_budgets():
+    cfg = fast_cfg(algorithms=("sa",), repetitions=2,
+                   budget=Budget(evals=4, seconds=60.0))
+    res = run_sweep([cfg])
+    # a seconds budget covers one sequential run; folding would shrink it
+    assert {r.repetition for r in res.records} == {0, 1}

@@ -3,7 +3,7 @@ import math
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core.chiplets import (COMPUTE, IO, MEMORY, Chiplet, LatencyParams,
                                  heterogeneous_chiplet, homogeneous_chiplet,

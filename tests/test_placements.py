@@ -6,7 +6,7 @@ constraints (order by type, rotation classes).
 """
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core.chiplets import COMPUTE, IO, MEMORY, paper_arch
 from repro.core.placement_hetero import HeteroRep, corner_place

@@ -5,7 +5,7 @@ import heapq
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core.chiplets import paper_arch
 from repro.core.placement_hetero import HeteroRep
