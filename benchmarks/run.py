@@ -17,6 +17,8 @@ MODULES = [
     ("fig14_15_synthetic", "paper Figs. 14/15: synthetic traffic"),
     ("fig16_18_traces", "paper Figs. 16-18: trace speedups"),
     ("table5_rate", "paper Table V: placements/s + §VII-E area"),
+    ("pipeline_throughput", "beyond-paper: device-resident pipeline vs "
+                            "host loop (PR 2)"),
     ("kernels", "kernel micro-benches"),
     ("bridge_roofline", "beyond-paper: bridge co-design + roofline"),
 ]

@@ -43,8 +43,11 @@ import numpy as np
 from .baseline import MeshBaseline
 from .chiplets import ArchSpec, paper_arch
 from .cost import total_cost
-from .optimize import (Evaluator, OptResult, best_random, genetic_algorithm,
-                       simulated_annealing)
+from .optimize import (Evaluator, OptResult, best_random,
+                       best_random_batched, best_random_steps, drive_stacked,
+                       genetic_algorithm, genetic_algorithm_batched,
+                       genetic_algorithm_steps, simulated_annealing,
+                       simulated_annealing_batched)
 from .placement_hetero import HeteroRep
 from .placement_homog import HomogRep
 from .proxies import fw_counts_ref, make_scorer
@@ -134,22 +137,33 @@ class SAParams:
 # Optimizer registry entries: uniform (evaluator, rng, budget, params).
 # ---------------------------------------------------------------------------
 
+# Budget -> driver-kwargs mappings, shared by the registered entry points
+# and the run_sweep step-generator factories (_br_steps/_ga_steps below) so
+# the stacked and unstacked paths can never diverge.
+
+def _br_kwargs(budget: Budget, params: BRParams) -> dict:
+    return dict(max_evals=budget.evals, time_budget_s=budget.seconds,
+                batch=params.batch)
+
+
+def _ga_kwargs(budget: Budget, params: GAParams) -> dict:
+    max_gen = (None if budget.evals is None
+               else max(1, budget.evals // params.population))
+    return dict(population=params.population, elitism=params.elitism,
+                tournament=params.tournament, p_mutation=params.p_mutation,
+                time_budget_s=budget.seconds, max_generations=max_gen)
+
+
 @register_optimizer("br", params_cls=BRParams)
 def _run_br(evaluator: Evaluator, rng: np.random.Generator, budget: Budget,
             params: BRParams) -> OptResult:
-    return best_random(evaluator, rng, max_evals=budget.evals,
-                       time_budget_s=budget.seconds, batch=params.batch)
+    return best_random(evaluator, rng, **_br_kwargs(budget, params))
 
 
 @register_optimizer("ga", params_cls=GAParams)
 def _run_ga(evaluator: Evaluator, rng: np.random.Generator, budget: Budget,
             params: GAParams) -> OptResult:
-    max_gen = (None if budget.evals is None
-               else max(1, budget.evals // params.population))
-    return genetic_algorithm(
-        evaluator, rng, population=params.population, elitism=params.elitism,
-        tournament=params.tournament, p_mutation=params.p_mutation,
-        time_budget_s=budget.seconds, max_generations=max_gen)
+    return genetic_algorithm(evaluator, rng, **_ga_kwargs(budget, params))
 
 
 @register_optimizer("sa", params_cls=SAParams)
@@ -158,6 +172,46 @@ def _run_sa(evaluator: Evaluator, rng: np.random.Generator, budget: Budget,
     max_it = (None if budget.evals is None
               else max(1, budget.evals // params.chains))
     return simulated_annealing(
+        evaluator, rng, t0_temp=params.t0_temp, block_len=params.block_len,
+        alpha=params.alpha, beta=params.beta, chains=params.chains,
+        time_budget_s=budget.seconds, max_iters=max_it)
+
+
+# Device-resident variants (homogeneous grids only): whole generations /
+# chain-blocks are produced as fused generate→graph→score device calls via
+# optimize.DevicePipeline, with invalid individuals masked-and-resampled in
+# batch.  Same typed params as their host-loop counterparts; paper defaults
+# apply through the "-batched" suffix stripping in _base_params.
+
+@register_optimizer("br-batched", params_cls=BRParams)
+def _run_br_batched(evaluator: Evaluator, rng: np.random.Generator,
+                    budget: Budget, params: BRParams) -> OptResult:
+    return best_random_batched(evaluator, rng, max_evals=budget.evals,
+                               time_budget_s=budget.seconds,
+                               batch=params.batch)
+
+
+@register_optimizer("ga-batched", params_cls=GAParams)
+def _run_ga_batched(evaluator: Evaluator, rng: np.random.Generator,
+                    budget: Budget, params: GAParams) -> OptResult:
+    # ga-batched scores elites once (population up front, then only the
+    # population - elitism children per generation), so the evals->
+    # generations conversion differs from the host GA's evals//population.
+    per_gen = max(params.population - params.elitism, 1)
+    max_gen = (None if budget.evals is None
+               else max(1, (budget.evals - params.population) // per_gen))
+    return genetic_algorithm_batched(
+        evaluator, rng, population=params.population, elitism=params.elitism,
+        tournament=params.tournament, p_mutation=params.p_mutation,
+        time_budget_s=budget.seconds, max_generations=max_gen)
+
+
+@register_optimizer("sa-batched", params_cls=SAParams)
+def _run_sa_batched(evaluator: Evaluator, rng: np.random.Generator,
+                    budget: Budget, params: SAParams) -> OptResult:
+    max_it = (None if budget.evals is None
+              else max(1, budget.evals // params.chains))
+    return simulated_annealing_batched(
         evaluator, rng, t0_temp=params.t0_temp, block_len=params.block_len,
         alpha=params.alpha, beta=params.beta, chains=params.chains,
         time_budget_s=budget.seconds, max_iters=max_it)
@@ -272,6 +326,13 @@ def clear_scorer_cache() -> None:
     _SCORER_STATS.update(hits=0, misses=0)
 
 
+def clear_pipeline_cache() -> None:
+    """Drop the device pipeline's cached jitted produce→graph stages
+    (per-grid static W matrices included); the scorer cache is separate."""
+    from .optimize import DevicePipeline
+    DevicePipeline.clear_stage_cache()
+
+
 def make_evaluator(rep, arch: ArchSpec, *, rng: np.random.Generator,
                    norm_samples: int, chunk: int = 16,
                    backend: str = "fw-ref", fw_impl=None) -> Evaluator:
@@ -328,9 +389,12 @@ class ExperimentConfig:
             d = paper_defaults(self.arch)
         except KeyError:
             d = None
-        if d is not None and isinstance(getattr(d, algo, None),
+        # "-batched" variants inherit their host-loop counterpart's paper
+        # defaults (same search hyper-parameters, different execution).
+        base = algo[:-len("-batched")] if algo.endswith("-batched") else algo
+        if d is not None and isinstance(getattr(d, base, None),
                                         entry.params_cls):
-            return getattr(d, algo)
+            return getattr(d, base)
         return entry.params_cls()
 
     def resolved_params(self, algo: str):
@@ -464,6 +528,8 @@ class SweepStats:
     evaluators_built: int      # normalizer draws (shared across reps)
     n_evaluated: int
     seconds: float
+    score_calls: int = 0       # scorer dispatches across the whole sweep
+    stacked_groups: int = 0    # lockstep groups with >= 2 runs
 
 
 @dataclass
@@ -476,7 +542,39 @@ class SweepResult:
         return [r for run in self.runs for r in run.records]
 
 
-def run_sweep(configs, *, fold_repetitions: bool = True) -> SweepResult:
+# Step-generator factories for optimizers that support lockstep stacked
+# scoring in run_sweep: same Budget -> kwargs mapping as the registered
+# entry points (shared helpers above), different executor.
+
+def _br_steps(ev, rng, budget: Budget, params: BRParams):
+    return best_random_steps(ev, rng, **_br_kwargs(budget, params))
+
+
+def _ga_steps(ev, rng, budget: Budget, params: GAParams):
+    return genetic_algorithm_steps(ev, rng, **_ga_kwargs(budget, params))
+
+
+_SWEEP_STACKABLE = {"br": _br_steps, "ga": _ga_steps}
+
+
+@dataclass
+class _SweepUnit:
+    """One (config, algorithm, repetition) run inside a sweep."""
+
+    cfg_i: int
+    cfg: ExperimentConfig
+    algo: str
+    rep_i: int                 # -1 for a folded batch record
+    ev: Evaluator
+    entry: OptimizerEntry
+    params: Any
+    budget: Budget
+    result: OptResult | None = None
+    seconds: float = 0.0
+
+
+def run_sweep(configs, *, fold_repetitions: bool = True,
+              stack_scoring: bool = True) -> SweepResult:
     """Run many configs, amortizing compilation and normalization.
 
     Unlike per-config :func:`run_experiment` (which re-draws normalizers
@@ -491,6 +589,20 @@ def run_sweep(configs, *, fold_repetitions: bool = True) -> SweepResult:
     run, so folding it would shrink per-repetition effort by ~k, and such
     configs run repetition-by-repetition instead.
 
+    With ``stack_scoring`` (default), BR/GA runs from configs that share a
+    jitted scorer (same layout, chunk and backend — e.g. GA populations
+    from configs differing only in seed or hyper-parameters) execute in
+    lockstep with their per-round scoring requests concatenated into a
+    single vmapped call (:func:`repro.core.optimize.drive_stacked`).
+    Results are bit-for-bit identical to unstacked execution; only the
+    number of device dispatches changes (``stats.score_calls``).  Runs
+    with a wall-clock budget are excluded (interleaving would consume
+    their time budget with the group's work, like repetition folding —
+    see above).  A stacked record's ``seconds`` is its *attributed* wall
+    time — its own generator resumes plus its proportional share of each
+    stacked scoring call — so :func:`summarize`'s per-record evals/s
+    stays meaningful.
+
     Because the Evaluator is shared, each record's ``n_generated`` is the
     number of placements generated *by that run* (a per-call delta), not
     the legacy cumulative counter.
@@ -498,8 +610,8 @@ def run_sweep(configs, *, fold_repetitions: bool = True) -> SweepResult:
     t0 = time.monotonic()
     miss0 = _SCORER_STATS["misses"]
     ev_cache: dict[tuple, Evaluator] = {}
-    runs: list[SweepRun] = []
-    for cfg in configs:
+    units: list[_SweepUnit] = []
+    for cfg_i, cfg in enumerate(configs):
         arch = paper_arch(cfg.arch, cfg.config)
         key = (cfg.arch, cfg.config, cfg.seed, cfg.norm_samples, cfg.chunk,
                cfg.backend, cfg.mutation_mode)
@@ -510,7 +622,6 @@ def run_sweep(configs, *, fold_repetitions: bool = True) -> SweepResult:
                 rep, arch, rng=rng, norm_samples=cfg.norm_samples,
                 chunk=cfg.chunk, backend=cfg.backend)
         ev = ev_cache[key]
-        records: list[RunRecord] = []
         for algo in cfg.algorithms:
             entry = OPTIMIZERS.get(algo)
             params = cfg.resolved_params(algo)
@@ -520,32 +631,60 @@ def run_sweep(configs, *, fold_repetitions: bool = True) -> SweepResult:
             if foldable:
                 p = dataclasses.replace(
                     params, chains=params.chains * cfg.repetitions)
-                ta = time.monotonic()
-                g0 = ev.n_generated
-                rng_a = np.random.default_rng(algo_seed(cfg.seed, 0, algo))
-                res = entry.fn(ev, rng_a, cfg.budget.scaled(cfg.repetitions),
-                               p)
-                res.n_generated = ev.n_generated - g0
-                records.append(RunRecord(cfg.arch, cfg.config, algo, -1,
-                                         res, time.monotonic() - ta))
+                units.append(_SweepUnit(
+                    cfg_i, cfg, algo, -1, ev, entry, p,
+                    cfg.budget.scaled(cfg.repetitions)))
             else:
                 for rep_i in range(cfg.repetitions):
-                    ta = time.monotonic()
-                    g0 = ev.n_generated
-                    rng_a = np.random.default_rng(
-                        algo_seed(cfg.seed, rep_i, algo))
-                    res = entry.fn(ev, rng_a, cfg.budget, params)
-                    res.n_generated = ev.n_generated - g0
-                    records.append(RunRecord(cfg.arch, cfg.config, algo,
-                                             rep_i, res,
-                                             time.monotonic() - ta))
-        runs.append(SweepRun(cfg, records))
+                    units.append(_SweepUnit(cfg_i, cfg, algo, rep_i, ev,
+                                            entry, params, cfg.budget))
+
+    # Lockstep groups: stackable units sharing one jitted scorer.  Wall-
+    # clock-budgeted runs never stack: interleaving would consume each
+    # run's time budget with the whole group's work.
+    groups: dict[int, list[_SweepUnit]] = {}
+    if stack_scoring:
+        for u in units:
+            if u.algo in _SWEEP_STACKABLE and u.budget.seconds is None:
+                groups.setdefault(id(u.ev.scorer), []).append(u)
+        groups = {k: v for k, v in groups.items() if len(v) > 1}
+    stacked = {id(u) for us in groups.values() for u in us}
+
+    for us in groups.values():
+        items = []
+        for u in us:
+            rng_a = np.random.default_rng(
+                algo_seed(u.cfg.seed, max(u.rep_i, 0), u.algo))
+            items.append((_SWEEP_STACKABLE[u.algo](u.ev, rng_a, u.budget,
+                                                   u.params), u.ev))
+        results, gen_counts, run_secs = drive_stacked(items)
+        for u, res, g, s in zip(us, results, gen_counts, run_secs):
+            res.n_generated = g
+            u.result, u.seconds = res, s
+    for u in units:
+        if id(u) in stacked:
+            continue
+        ta = time.monotonic()
+        g0 = u.ev.n_generated
+        rng_a = np.random.default_rng(
+            algo_seed(u.cfg.seed, max(u.rep_i, 0), u.algo))
+        res = u.entry.fn(u.ev, rng_a, u.budget, u.params)
+        res.n_generated = u.ev.n_generated - g0
+        u.result, u.seconds = res, time.monotonic() - ta
+
+    runs = [SweepRun(cfg, []) for cfg in configs]
+    for u in units:          # units were built in config order
+        runs[u.cfg_i].records.append(
+            RunRecord(u.cfg.arch, u.cfg.config, u.algo, u.rep_i, u.result,
+                      u.seconds))
     stats = SweepStats(
         scorers_built=_SCORER_STATS["misses"] - miss0,
         evaluators_built=len(ev_cache),
         n_evaluated=sum(r.result.n_evaluated
                         for run in runs for r in run.records),
-        seconds=time.monotonic() - t0)
+        seconds=time.monotonic() - t0,
+        score_calls=sum(ev.n_score_calls for ev in ev_cache.values()),
+        stacked_groups=len(groups))
     return SweepResult(runs, stats)
 
 

@@ -14,17 +14,15 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from .chiplets import COMPUTE, IO, MEMORY, ArchSpec
 from .proxies import Layout
-from .topology import PlacedPhys, ScoreGraph, _UnionFind, build_score_graph
-
-# Facing direction of the single PHY after rot r (base chiplet has PHY south).
-_ROT_DIR = ("s", "e", "n", "w")
-# Grid deltas per direction (row grows northwards).
-_DIR_DELTA = {"n": (1, 0), "s": (-1, 0), "e": (0, 1), "w": (0, -1)}
-_OPP = {"n": "s", "s": "n", "e": "w", "w": "e"}
+from .topology import (DIR_DELTA as _DIR_DELTA, OPP_DIR as _OPP,
+                       ROT_DIR as _ROT_DIR, PlacedPhys, ScoreGraph,
+                       _UnionFind, build_score_graph)
 
 
 Sol = tuple[np.ndarray, np.ndarray]  # (types [R,C], rot [R,C])
@@ -309,3 +307,200 @@ class HomogRep:
         geo = self.geometry(sol)
         return build_score_graph(self.arch, geo, links, self.e_max,
                                  self.is_connected(sol))
+
+    def batch_ops(self) -> "HomogBatch":
+        """Cached vectorized (device-resident) operators for this grid."""
+        if not hasattr(self, "_batch_ops"):
+            self._batch_ops = HomogBatch(self)
+        return self._batch_ops
+
+
+# ---------------------------------------------------------------------------
+# Device-resident batched operators.
+#
+# The host operators above generate/mutate/merge one placement at a time with
+# a ``np.random.Generator``; at HexaMesh scale the per-individual Python loop
+# (plus the retry-until-connected loop around it) dominates wall time.
+# ``HomogBatch`` mirrors the same decision points as pure JAX array ops over
+# stacked [B, R, C] ``(types, rot)`` arrays keyed by a PRNG key, so a whole
+# GA generation / SA chain-block is produced in one fused device call (see
+# ``optimize.DevicePipeline``).  Equivalence with the host operators is
+# *distributional* — every random choice is uniform over the same candidate
+# set — not bit-for-bit (different RNG streams); tested in
+# tests/test_batched_pipeline.py.
+# ---------------------------------------------------------------------------
+
+_KINDS = (COMPUTE, MEMORY, IO)
+_SWAP_TRIES = 128     # host caps at 200 sequential tries; pre-drawn here
+
+
+class HomogBatch:
+    """Vectorized ``random/mutate/merge`` over stacked homogeneous grids."""
+
+    def __init__(self, rep: HomogRep):
+        self.rep = rep
+        self.R, self.C = rep.R, rep.C
+        self.cells = rep.R * rep.C
+        fill = [k for k, ids in rep._kind_instances.items() for _ in ids]
+        fill += [-1] * (self.cells - len(fill))
+        self._kinds_fill = jnp.asarray(np.array(fill, dtype=np.int8))
+        self._counts = np.array(
+            [len(rep._kind_instances.get(k, ())) for k in _KINDS], np.int32)
+        rotatable = np.array([bool(rep._rotatable.get(k, False))
+                              for k in _KINDS])
+        self._rotatable_kind = jnp.asarray(rotatable)
+        self._any_rotatable = bool(rotatable.any())
+        inside = np.zeros((self.R, self.C, 4), bool)
+        for rot_i, d in enumerate(_ROT_DIR):
+            dr, dc = _DIR_DELTA[d]
+            for r in range(self.R):
+                for c in range(self.C):
+                    inside[r, c, rot_i] = (0 <= r + dr < self.R
+                                           and 0 <= c + dc < self.C)
+        self._inside = jnp.asarray(inside)
+        self._dr = jnp.asarray(
+            np.array([_DIR_DELTA[d][0] for d in _ROT_DIR], np.int32))
+        self._dc = jnp.asarray(
+            np.array([_DIR_DELTA[d][1] for d in _ROT_DIR], np.int32))
+
+    # -- rotation re-roll (vectorized ``_fix_rotations``) -------------------
+    def _neighbor_occ(self, occ: jnp.ndarray) -> jnp.ndarray:
+        """[..., R, C] occupancy -> [..., R, C, 4] per-rotation neighbor
+        occupancy in ``_ROT_DIR`` order (out-of-grid counts unoccupied)."""
+        pad = [(0, 0)] * (occ.ndim - 2) + [(1, 1), (1, 1)]
+        po = jnp.pad(occ, pad, constant_values=False)
+        R, C = self.R, self.C
+        sl = lambda dr, dc: po[..., 1 + dr:1 + dr + R, 1 + dc:1 + dc + C]
+        return jnp.stack(
+            [sl(*_DIR_DELTA[d]) for d in _ROT_DIR], axis=-1)
+
+    def _rotatable_cells(self, types: jnp.ndarray) -> jnp.ndarray:
+        occ = types >= 0
+        kind = jnp.clip(types, 0, 2).astype(jnp.int32)
+        return occ & self._rotatable_kind[kind]
+
+    def _roll_rot_batch(self, key, types, rot, update) -> jnp.ndarray:
+        """Re-roll rotations under ``update``: rotatable cells get a uniform
+        pick from occupied-facing (else in-grid, else all) directions, all
+        other updated cells get 0; cells outside ``update`` keep ``rot``."""
+        occ = types >= 0
+        nb = self._neighbor_occ(occ)
+        cand = jnp.where(nb.any(-1, keepdims=True), nb,
+                         jnp.where(self._inside.any(-1, keepdims=True),
+                                   self._inside, True))
+        g = jax.random.gumbel(key, occ.shape + (4,))
+        new = jnp.argmax(jnp.where(cand, g, -jnp.inf), axis=-1)
+        new = new.astype(rot.dtype)
+        rotatable = self._rotatable_cells(types)
+        return jnp.where(update & rotatable, new,
+                         jnp.where(update, 0, rot)).astype(jnp.int8)
+
+    # -- the four representation functions, batched -------------------------
+    def random_batch(self, key, n: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """n independent uniform placements: a random permutation of the
+        chiplet-kind multiset over the grid, rotations re-rolled."""
+        k1, k2 = jax.random.split(key)
+        keys = jax.random.split(k1, n)
+        flat = jax.vmap(
+            lambda k: jax.random.permutation(k, self._kinds_fill))(keys)
+        types = flat.reshape(n, self.R, self.C)
+        rot = jnp.zeros_like(types)
+        rot = self._roll_rot_batch(k2, types, rot,
+                                   jnp.ones(types.shape, bool))
+        return types, rot
+
+    def _onehot_cells(self, idx: jnp.ndarray, flag: jnp.ndarray
+                      ) -> jnp.ndarray:
+        return (jnp.arange(self.cells)[None, :] == idx[:, None]) \
+            & flag[:, None]
+
+    def mutate_batch(self, key, types, rot
+                     ) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """Batched ``mutate``: per placement either a (neighbor-)swap of two
+        differing cells or a re-roll of one rotatable chiplet (or both,
+        per ``mutation_mode``), with the host's first-valid-try semantics."""
+        B = types.shape[0]
+        neighbor = self.rep.mutation_mode.startswith("neighbor")
+        both = self.rep.mutation_mode.endswith("both")
+        kcoin, kr1, kc1, kd, kr2, kc2, kpick, kfix = jax.random.split(key, 8)
+        if both or not self._any_rotatable:
+            do_swap = jnp.ones(B, bool)
+        else:
+            do_swap = jax.random.bernoulli(kcoin, 0.5, (B,))
+        if not self._any_rotatable:
+            do_rot = jnp.zeros(B, bool)
+        elif both:
+            do_rot = jnp.ones(B, bool)
+        else:
+            do_rot = ~do_swap
+        # Pre-drawn swap tries; the first valid one is the host's accepted
+        # draw (identical first-success distribution).
+        T = _SWAP_TRIES
+        r1 = jax.random.randint(kr1, (B, T), 0, self.R)
+        c1 = jax.random.randint(kc1, (B, T), 0, self.C)
+        if neighbor:
+            d = jax.random.randint(kd, (B, T), 0, 4)
+            r2 = r1 + self._dr[d]
+            c2 = c1 + self._dc[d]
+        else:
+            r2 = jax.random.randint(kr2, (B, T), 0, self.R)
+            c2 = jax.random.randint(kc2, (B, T), 0, self.C)
+        inb = (r2 >= 0) & (r2 < self.R) & (c2 >= 0) & (c2 < self.C)
+        i1 = r1 * self.C + c1
+        i2 = jnp.clip(r2, 0, self.R - 1) * self.C + jnp.clip(c2, 0,
+                                                             self.C - 1)
+        tflat = types.reshape(B, self.cells)
+        rflat = rot.reshape(B, self.cells)
+        t1 = jnp.take_along_axis(tflat, i1, axis=1)
+        t2 = jnp.take_along_axis(tflat, i2, axis=1)
+        valid = inb & (t1 != t2) & ~((t1 < 0) & (t2 < 0))
+        first = jnp.argmax(valid, axis=1)
+        sel = lambda a: jnp.take_along_axis(a, first[:, None], axis=1)[:, 0]
+        do_it = do_swap & valid.any(axis=1)
+        s1 = jnp.where(do_it, sel(i1), 0)
+        s2 = jnp.where(do_it, sel(i2), 0)      # s1 == s2 == 0 -> no-op swap
+        b = jnp.arange(B)
+        v1t, v2t = tflat[b, s1], tflat[b, s2]
+        tflat = tflat.at[b, s1].set(v2t).at[b, s2].set(v1t)
+        v1r, v2r = rflat[b, s1], rflat[b, s2]
+        rflat = rflat.at[b, s1].set(v2r).at[b, s2].set(v1r)
+        update = self._onehot_cells(s1, do_it) | self._onehot_cells(s2, do_it)
+        if self._any_rotatable:
+            rc = self._rotatable_cells(tflat)
+            g = jax.random.gumbel(kpick, (B, self.cells))
+            pick = jnp.argmax(jnp.where(rc, g, -jnp.inf), axis=1)
+            update |= self._onehot_cells(pick, do_rot & rc.any(axis=1))
+        types2 = tflat.reshape(B, self.R, self.C)
+        rot2 = rflat.reshape(B, self.R, self.C)
+        rot2 = self._roll_rot_batch(kfix, types2, rot2,
+                                    update.reshape(B, self.R, self.C))
+        return types2, rot2
+
+    def merge_batch(self, key, ta, ra, tb, rb
+                    ) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """Batched §V-A merge: keep agreeing cells, distribute the leftover
+        chiplets uniformly over the disagreeing cells (random-rank fill ==
+        host's shuffled fill), carry rotations only where both agree."""
+        B = ta.shape[0]
+        k1, k2 = jax.random.split(key)
+        match = ta == tb
+        taf = ta.reshape(B, self.cells)
+        mf = match.reshape(B, self.cells)
+        carried = jnp.where(mf, taf, -2)
+        rem = [self._counts[k] - (carried == k).sum(axis=1) for k in range(3)]
+        prio = jax.random.uniform(k1, (B, self.cells))
+        prio = jnp.where(carried == -2, prio, 2.0)   # resolved cells: last
+        rank = jnp.argsort(jnp.argsort(prio, axis=1), axis=1)
+        c0 = rem[0][:, None]
+        c1 = c0 + rem[1][:, None]
+        c2 = c1 + rem[2][:, None]
+        fill = jnp.where(rank < c0, COMPUTE,
+                         jnp.where(rank < c1, MEMORY,
+                                   jnp.where(rank < c2, IO, -1)))
+        types = jnp.where(mf, taf, fill.astype(ta.dtype))
+        types = types.reshape(B, self.R, self.C)
+        rot_match = match & (ra == rb)
+        rot0 = jnp.where(rot_match, ra, 0).astype(ra.dtype)
+        update = ~(rot_match & self._rotatable_cells(types))
+        rot = self._roll_rot_batch(k2, types, rot0, update)
+        return types, rot

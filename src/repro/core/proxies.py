@@ -115,12 +115,18 @@ def _type_pairs(layout: Layout) -> dict:
     return out
 
 
-def _metrics_one(W, edges, edge_mask, area, *, pairs, fw_impl):
+def _metrics_one(W, edges, edge_mask, area, *, pairs, conn, fw_impl):
     """All nine cost components for a single placement (jit/vmap-able)."""
     D, Ncnt = fw_impl(W)
     eu, ev = edges[:, 0], edges[:, 1]
     w_e = W[eu, ev]
     out = {"area": area}
+    # In-scorer connectivity (paper's validity check, derived from the FW
+    # distance matrix instead of a host-side union-find): the placement is
+    # connected iff every virtual source reaches every virtual sink.
+    src_all, dst_all = conn
+    out["connected"] = jnp.all(
+        D[jnp.asarray(src_all)][:, jnp.asarray(dst_all)] < INF_CUT)
     for t, (srcs, dsts, same) in pairs.items():
         srcs = jnp.asarray(srcs)
         dsts = jnp.asarray(dsts)
@@ -162,9 +168,17 @@ def make_scorer(layout: Layout, *, fw_impl=fw_counts_ref, chunk: int = 16):
 
     Placements are scored in chunks of ``chunk`` via ``lax.map`` to bound
     memory; within a chunk, everything is vmapped.
+
+    Besides the nine cost metrics the output carries a ``connected`` bool
+    per placement (virtual all-src -> all-sink reachability on the FW
+    distance matrix) so batched optimizers can mask-and-resample invalid
+    individuals without a host-side union-find pass.
     """
     pairs = _type_pairs(layout)
-    one = functools.partial(_metrics_one, pairs=pairs, fw_impl=fw_impl)
+    conn = (layout.Vp + np.arange(layout.N, dtype=np.int32),
+            layout.Vp + layout.N + np.arange(layout.N, dtype=np.int32))
+    one = functools.partial(_metrics_one, pairs=pairs, conn=conn,
+                            fw_impl=fw_impl)
 
     @jax.jit
     def score(batch):

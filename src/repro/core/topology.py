@@ -24,11 +24,21 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from .chiplets import ArchSpec
 
 INF = np.float32(1.0e9)
+
+# Canonical grid-direction conventions of the homogeneous representation:
+# facing direction of a single-PHY chiplet after rotation r, the opposite
+# direction, and the (row, col) delta per direction (row grows northwards).
+# placement_homog imports these (this module cannot import it back).
+ROT_DIR = ("s", "e", "n", "w")
+OPP_DIR = {"n": "s", "s": "n", "e": "w", "w": "e"}
+DIR_DELTA = {"n": (1, 0), "s": (-1, 0), "e": (0, 1), "w": (0, -1)}
 
 
 @dataclass
@@ -199,3 +209,146 @@ def stack_graphs(graphs: list[ScoreGraph]) -> dict:
         edge_mask=np.stack([g.edge_mask for g in graphs]),
         area=np.array([g.area for g in graphs], dtype=np.float32),
     )
+
+
+# ---------------------------------------------------------------------------
+# Batched ScoreGraph assembly for the homogeneous grid.
+#
+# §V-A get_network as array ops: the candidate-link structure of an R x C
+# grid is *static* — each of the A = R(C-1) + (R-1)C cell adjacencies either
+# carries a D2D link (both facing PHYs exist) or not — so link inference is
+# masked selection over a fixed adjacency table instead of the heterogeneous
+# path's MST + union-find.  Everything about the graph that does not depend
+# on the placement (diagonal, internal relay edges, virtual source/sink
+# edges) is precomputed host-side into one static weight matrix; a batch of
+# placements only scatters its D2D links on top.  Connectivity is NOT
+# decided here: the scorer derives it from the Floyd-Warshall distance
+# matrix (a placement is connected iff no virtual src->sink distance reaches
+# ``proxies.INF_CUT``), so invalid individuals are masked-and-resampled in
+# batch by the optimizer drivers instead of retried one at a time.
+# ---------------------------------------------------------------------------
+
+
+class HomogGraphBatch:
+    """Batched ``(types, rot) -> stacked ScoreGraph arrays`` for one grid."""
+
+    def __init__(self, arch: ArchSpec, R: int, C: int):
+        self.arch, self.R, self.C = arch, R, C
+        n = len(arch.chiplets)
+        phy_base = np.zeros(n + 1, dtype=np.int64)
+        for i, ch in enumerate(arch.chiplets):
+            phy_base[i + 1] = phy_base[i] + ch.n_phys()
+        Vp = int(phy_base[-1])
+        self.Vp, self.N = Vp, n
+        self.V = Vp + 2 * n
+        self.e_max = 2 * (R * (C - 1) + (R - 1) * C)
+        self._nphys = jnp.asarray(
+            np.array([ch.n_phys() for ch in arch.chiplets], np.int32))
+        self._phy_base = jnp.asarray(phy_base[:-1].astype(np.int32))
+        # Row-major instance assignment table: j-th chiplet of kind k.
+        by_kind = {k: [i for i, ch in enumerate(arch.chiplets)
+                       if ch.kind == k] for k in (0, 1, 2)}
+        maxc = max(1, max(len(v) for v in by_kind.values()))
+        table = np.zeros((3, maxc), np.int32)
+        for k, ids in by_kind.items():
+            table[k, :len(ids)] = ids
+        self._kind_table = jnp.asarray(table)
+        # Static part of W: diagonal, internal relay edges, virtual edges.
+        owner = np.zeros(Vp, dtype=np.int64)
+        for i in range(n):
+            owner[phy_base[i]:phy_base[i + 1]] = i
+        W = np.full((self.V, self.V), INF, dtype=np.float32)
+        np.fill_diagonal(W, 0.0)
+        lr = np.float32(arch.latency.l_relay)
+        for c in range(n):
+            idx = np.nonzero(owner == c)[0]
+            if arch.chiplets[c].relay:
+                for a in range(len(idx)):
+                    for b2 in range(a + 1, len(idx)):
+                        p, q = int(idx[a]), int(idx[b2])
+                        W[p, q] = min(W[p, q], lr)
+                        W[q, p] = min(W[q, p], lr)
+            W[Vp + c, idx] = 0.0
+            W[idx, Vp + n + c] = 0.0
+        self._W_static = jnp.asarray(W)
+        self._d2d = np.float32(arch.latency.d2d_cost())
+        # Static adjacency table: cell pair + facing directions, scanning
+        # each adjacency once ("n"/"e"), as in HomogRep.links_of.
+        cell1, cell2, loc1, loc2, rot1, rot2 = [], [], [], [], [], []
+        for r in range(R):
+            for c in range(C):
+                for d in ("n", "e"):
+                    dr, dc = DIR_DELTA[d]
+                    rr, cc = r + dr, c + dc
+                    if not (0 <= rr < R and 0 <= cc < C):
+                        continue
+                    o = OPP_DIR[d]
+                    cell1.append(r * C + c)
+                    cell2.append(rr * C + cc)
+                    loc1.append("nesw".index(d))    # 4-PHY local index
+                    loc2.append("nesw".index(o))
+                    rot1.append(ROT_DIR.index(d))  # 1-PHY rotation
+                    rot2.append(ROT_DIR.index(o))
+        self._a_cell1 = np.array(cell1, np.int32)
+        self._a_cell2 = np.array(cell2, np.int32)
+        self._a_loc1 = np.array(loc1, np.int32)
+        self._a_loc2 = np.array(loc2, np.int32)
+        self._a_rot1 = np.array(rot1, np.int32)
+        self._a_rot2 = np.array(rot2, np.int32)
+        # §V-A get_area: identical for every placement on the grid.
+        sz = arch.chiplets[0].w * arch.chiplets[0].h
+        self.area = np.float32(sz * R * C)
+
+    def _instances(self, tflat: jnp.ndarray) -> jnp.ndarray:
+        """Row-major instance ids per cell ([B, cells], -1 for empty)."""
+        inst = jnp.full(tflat.shape, -1, jnp.int32)
+        for k in range(3):
+            mk = tflat == k
+            rank = jnp.cumsum(mk, axis=1) - 1
+            rank = jnp.clip(rank, 0, self._kind_table.shape[1] - 1)
+            inst = jnp.where(mk, self._kind_table[k][rank], inst)
+        return inst
+
+    def _phy_at(self, inst, rot, loc4, rotidx):
+        """Global PHY index facing the adjacency (or -1)."""
+        ic = jnp.clip(inst, 0)
+        four = self._nphys[ic] == 4
+        single = rot == rotidx
+        return jnp.where(four, self._phy_base[ic] + loc4,
+                         jnp.where(single, self._phy_base[ic], -1))
+
+    def build(self, types: jnp.ndarray, rot: jnp.ndarray) -> dict:
+        """[B, R, C] stacked placements -> batched ScoreGraph arrays
+        (same keys as :func:`stack_graphs`; jit/vmap-able)."""
+        B = types.shape[0]
+        tflat = types.reshape(B, -1).astype(jnp.int32)
+        rflat = rot.reshape(B, -1).astype(jnp.int32)
+        inst = self._instances(tflat)
+        i1 = inst[:, self._a_cell1]
+        i2 = inst[:, self._a_cell2]
+        p = self._phy_at(i1, rflat[:, self._a_cell1], self._a_loc1,
+                         self._a_rot1)
+        q = self._phy_at(i2, rflat[:, self._a_cell2], self._a_loc2,
+                         self._a_rot2)
+        valid = (i1 >= 0) & (i2 >= 0) & (p >= 0) & (q >= 0)
+        pu = jnp.where(valid, p, 0)
+        qu = jnp.where(valid, q, 0)
+        vals = jnp.where(valid, self._d2d, INF)    # INF scatter-min: no-op
+
+        def one(pu1, qu1, v1):
+            return self._W_static.at[pu1, qu1].min(v1).at[qu1, pu1].min(v1)
+
+        W = jax.vmap(one)(pu, qu, vals)
+        ed = jnp.stack([jnp.stack([pu, qu], axis=-1),
+                        jnp.stack([qu, pu], axis=-1)], axis=2)
+        edges = ed.reshape(B, self.e_max, 2).astype(jnp.int32)
+        mask = jnp.broadcast_to(valid[:, :, None],
+                                valid.shape + (2,)).reshape(B, self.e_max)
+        area = jnp.full((B,), self.area, jnp.float32)
+        return dict(W=W, edges=edges, edge_mask=mask, area=area)
+
+
+def build_score_graphs_batched(arch: ArchSpec, R: int, C: int,
+                               types, rot) -> dict:
+    """One-shot convenience wrapper around :class:`HomogGraphBatch`."""
+    return HomogGraphBatch(arch, R, C).build(types, rot)

@@ -316,9 +316,9 @@ def collective_stats(hlo_text: str, n_chips: int) -> dict:
 
 
 def analyze(compiled, n_chips: int) -> dict:
-    from .hlo_cost import analyze_hlo
+    from .hlo_cost import analyze_hlo, xla_cost_analysis
 
-    ca = compiled.cost_analysis() or {}
+    ca = xla_cost_analysis(compiled)
     ma = compiled.memory_analysis()
     mem = {}
     for f in ("argument_size_in_bytes", "output_size_in_bytes",

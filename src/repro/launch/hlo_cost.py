@@ -44,6 +44,19 @@ COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
                   "collective-permute")
 
 
+def xla_cost_analysis(compiled) -> dict:
+    """``compiled.cost_analysis()`` normalized across jax versions.
+
+    Depending on the jax version it returns a flat dict, a one-element list
+    of dicts (one per executable), or None; callers always want the flat
+    per-module dict.
+    """
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else None
+    return dict(ca) if ca else {}
+
+
 def shape_elems_bytes(type_str: str) -> tuple[int, int]:
     """Total (elements, bytes) over all array shapes in a type string."""
     elems = tot = 0
@@ -231,7 +244,15 @@ class Cost:
                                   scale * w, sh))
 
 
-def analyze_hlo(hlo: str, n_chips: int) -> dict:
+def analyze_hlo(hlo: str, n_chips: int, *, while_trips: bool = True) -> dict:
+    """Cost totals for one HLO module.
+
+    ``while_trips=False`` counts every while body once — XLA
+    ``cost_analysis`` semantics, useful to validate the per-instruction
+    model against XLA on modules where the compiler introduced its own
+    loops; the default multiplies through recovered trip counts (the whole
+    point of this module).
+    """
     comps, entry = parse_module(hlo)
     memo: dict[str, Cost] = {}
 
@@ -252,7 +273,8 @@ def analyze_hlo(hlo: str, n_chips: int) -> dict:
                     body = mb.group(1)
                 if mcnd:
                     cond = mcnd.group(1)
-                trips = _trip_count(comps, cond) if cond else 1
+                trips = _trip_count(comps, cond) \
+                    if cond and while_trips else 1
                 if body:
                     c.add(cost_of(body), trips, f"while[{trips}]:{body}")
                 continue

@@ -1,8 +1,8 @@
 """Registry-driven experiment API: serialization round-trips, registry
 dispatch equivalence with the legacy runner loop, error paths, and
-sweep-level scorer sharing."""
+sweep-level scorer sharing / cross-config stacked scoring."""
 import dataclasses
-import warnings
+import importlib
 import zlib
 
 import numpy as np
@@ -10,7 +10,7 @@ import pytest
 
 from repro.core import api
 from repro.core.api import (Budget, ExperimentConfig, GAParams, SAParams,
-                            algo_seed, baseline_cost, clear_scorer_cache,
+                            algo_seed, clear_scorer_cache,
                             run_experiment, run_sweep, scorer_cache_stats)
 from repro.core.chiplets import paper_arch
 from repro.core.optimize import (Evaluator, best_random, genetic_algorithm,
@@ -18,7 +18,6 @@ from repro.core.optimize import (Evaluator, best_random, genetic_algorithm,
 from repro.core.placement_homog import HomogRep
 from repro.core.registries import (OPTIMIZERS, SCORER_BACKENDS, Registry,
                                    register_optimizer, resolve_backend)
-from repro.core.runner import Experiment
 
 ARCH = "homog32"
 
@@ -172,17 +171,11 @@ def test_run_experiment_matches_legacy_loop_bit_for_bit():
         assert _costs(got.result.history) == _costs(want.history)
 
 
-def test_deprecated_experiment_shim_delegates():
-    with pytest.warns(DeprecationWarning):
-        exp = Experiment(ARCH, algorithms=("br",), max_evals=8,
-                         norm_samples=8, seed=5)
-        recs = exp.run()
-    new = run_experiment(fast_cfg(chunk=16, seed=5))
-    assert recs[0].result.best_cost == new[0].result.best_cost
-    with pytest.warns(DeprecationWarning):
-        bc, bm = exp.baseline_cost()
-    bc2, bm2 = baseline_cost(fast_cfg(chunk=16, seed=5))
-    assert bc == bc2 and bm == bm2
+def test_legacy_experiment_shim_is_gone():
+    # The deprecated repro.core.runner.Experiment wrapper was removed
+    # (ROADMAP item); the module must not silently reappear.
+    with pytest.raises(ModuleNotFoundError):
+        importlib.import_module("repro.core.runner")
 
 
 def test_algo_seed_is_processes_stable():
@@ -245,3 +238,42 @@ def test_sweep_never_folds_wall_clock_budgets():
     res = run_sweep([cfg])
     # a seconds budget covers one sequential run; folding would shrink it
     assert {r.repetition for r in res.records} == {0, 1}
+
+
+def test_sweep_stacks_scoring_across_configs_bit_for_bit():
+    """BR/GA runs sharing a jitted scorer execute in lockstep with stacked
+    scoring calls; results are bit-for-bit those of unstacked execution."""
+    cfgs = [fast_cfg(seed=s, algorithms=("br", "ga"), budget=Budget(evals=16),
+                     params={"ga": {"population": 8, "elitism": 2,
+                                    "tournament": 3}})
+            for s in (0, 1)]
+    stacked = run_sweep(cfgs)
+    unstacked = run_sweep(cfgs, stack_scoring=False)
+    assert stacked.stats.stacked_groups == 1
+    assert stacked.stats.score_calls < unstacked.stats.score_calls
+    for a, b in zip(stacked.records, unstacked.records):
+        assert (a.algorithm, a.repetition) == (b.algorithm, b.repetition)
+        assert a.result.best_cost == b.result.best_cost
+        assert a.result.n_evaluated == b.result.n_evaluated
+        assert a.result.n_generated == b.result.n_generated
+        assert [(n, c) for _, n, c in a.result.history] \
+            == [(n, c) for _, n, c in b.result.history]
+
+
+def test_sweep_never_stacks_wall_clock_budgets():
+    # interleaving would consume each run's time budget with the whole
+    # group's work, like repetition folding would shrink it
+    cfgs = [fast_cfg(seed=s, budget=Budget(evals=4, seconds=60.0))
+            for s in (0, 1)]
+    res = run_sweep(cfgs)
+    assert res.stats.stacked_groups == 0
+
+
+def test_batched_optimizers_registered_with_paper_defaults():
+    assert set(OPTIMIZERS.names()) >= {"br-batched", "ga-batched",
+                                       "sa-batched"}
+    cfg = ExperimentConfig(arch="homog32")
+    # "-batched" variants inherit their host-loop counterpart's Table
+    # III/IV hyper-parameters.
+    assert cfg.resolved_params("ga-batched") == cfg.resolved_params("ga")
+    assert cfg.resolved_params("sa-batched") == cfg.resolved_params("sa")

@@ -1,0 +1,213 @@
+"""Device-resident batched pipeline vs the host-loop reference.
+
+Three layers of equivalence:
+
+* **operators** — ``HomogBatch.random_batch/mutate_batch/merge_batch``
+  preserve the same invariants as the host operators (chiplet counts,
+  legal rotations, carried merge matches) and sample the same
+  distribution (connectivity rate, cost distribution of random
+  placements);
+* **graphs** — ``build_score_graphs_batched`` agrees *bit-for-bit* with
+  the host ``score_graph`` path (W matrix, D2D edge set, area), and the
+  scorer's FW-derived ``connected`` output agrees with the host
+  union-find connectivity on the homog grid;
+* **optimizers** — br/ga/sa-batched run through the registry API, improve
+  over a single random placement, and return host-format solutions that
+  the host path verifies as valid.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.api import Budget, ExperimentConfig, run_experiment
+from repro.core.chiplets import COMPUTE, IO, MEMORY, paper_arch
+from repro.core.optimize import DevicePipeline, Evaluator
+from repro.core.placement_hetero import HeteroRep
+from repro.core.placement_homog import HomogRep
+from repro.core.proxies import make_scorer
+from repro.core.topology import HomogGraphBatch, build_score_graphs_batched
+
+ARCH = paper_arch("homog32", "baseline")
+R, C = 8, 5
+
+
+@pytest.fixture(scope="module")
+def rep():
+    return HomogRep(ARCH, R=R, C=C)
+
+
+@pytest.fixture(scope="module")
+def ops(rep):
+    return rep.batch_ops()
+
+
+def counts_of(types):
+    return {k: int((types == k).sum()) for k in (COMPUTE, MEMORY, IO)}
+
+
+def assert_valid_batch(rep, t, r):
+    """Host-side invariants for a stacked [B, R, C] batch."""
+    for b in range(t.shape[0]):
+        assert counts_of(t[b]) == {COMPUTE: 32, MEMORY: 4, IO: 4}
+        assert (r[b][t[b] == COMPUTE] == 0).all()
+        assert (r[b][t[b] < 0] == 0).all()
+        for rr in range(rep.R):
+            for cc in range(rep.C):
+                k = t[b, rr, cc]
+                if k >= 0 and rep._rotatable.get(int(k), False):
+                    occ = rep._occupied_dirs(t[b], rr, cc)
+                    if occ:        # PHY must face a chiplet when one exists
+                        assert int(r[b, rr, cc]) in occ
+
+
+# ---------------------------------------------------------------------------
+# Operators.
+# ---------------------------------------------------------------------------
+
+def test_random_batch_invariants(rep, ops):
+    t, r = jax.jit(ops.random_batch, static_argnums=1)(
+        jax.random.PRNGKey(0), 24)
+    assert t.dtype == jnp.int8 and t.shape == (24, R, C)
+    assert_valid_batch(rep, np.asarray(t), np.asarray(r))
+
+
+def test_mutate_batch_invariants(rep, ops):
+    t, r = ops.random_batch(jax.random.PRNGKey(1), 24)
+    mt, mr = jax.jit(ops.mutate_batch)(jax.random.PRNGKey(2), t, r)
+    assert_valid_batch(rep, np.asarray(mt), np.asarray(mr))
+    # neighbor-one mode: swaps move cells by one pitch; at least some
+    # placements must actually change
+    changed = (np.asarray(mt) != np.asarray(t)).any(axis=(1, 2)) \
+        | (np.asarray(mr) != np.asarray(r)).any(axis=(1, 2))
+    assert changed.any()
+
+
+def test_merge_batch_carries_matches(rep, ops):
+    ta, ra = ops.random_batch(jax.random.PRNGKey(3), 24)
+    tb, rb = ops.random_batch(jax.random.PRNGKey(4), 24)
+    tg, rg = jax.jit(ops.merge_batch)(jax.random.PRNGKey(5), ta, ra, tb, rb)
+    assert_valid_batch(rep, np.asarray(tg), np.asarray(rg))
+    ta_, tb_, tg_ = np.asarray(ta), np.asarray(tb), np.asarray(tg)
+    ra_, rb_, rg_ = np.asarray(ra), np.asarray(rb), np.asarray(rg)
+    for b in range(24):
+        match = ta_[b] == tb_[b]
+        assert (tg_[b][match] == ta_[b][match]).all()
+        # carried rotations only where both parents agree on type+rotation
+        rot_match = match & (ra_[b] == rb_[b]) \
+            & np.isin(ta_[b], [MEMORY, IO])    # single-PHY kinds (baseline)
+        assert (rg_[b][rot_match] == ra_[b][rot_match]).all()
+
+
+def test_random_batch_matches_host_distribution(rep, ops):
+    """Connectivity rate and cost distribution of raw random placements
+    agree between the host operator and the device operator (same
+    distribution, different RNG streams)."""
+    n = 96
+    host_rng = np.random.default_rng(11)
+    host = [rep.random(host_rng) for _ in range(n)]
+    host_conn = np.array([rep.is_connected(s) for s in host])
+    t, r = ops.random_batch(jax.random.PRNGKey(12), n)
+    gb = HomogGraphBatch(ARCH, R, C)
+    scorer = make_scorer(rep.layout, chunk=16)
+    out = {k: np.asarray(v) for k, v in scorer(gb.build(t, r)).items()}
+    dev_conn = out["connected"].astype(bool)
+    p = host_conn.mean()
+    # binomial 4-sigma band around the host estimate
+    sigma = np.sqrt(max(p * (1 - p), 1e-4) / n)
+    assert abs(dev_conn.mean() - p) < 4 * sigma + 2 / n
+    # mean C2M latency over *connected* samples drawn from each stream
+    host_out = {k: np.asarray(v) for k, v in scorer(
+        gb.build(jnp.asarray(np.stack([s[0] for s in host])),
+                 jnp.asarray(np.stack([s[1] for s in host])))).items()}
+    if host_conn.any() and dev_conn.any():
+        a = host_out["lat_c2m"][host_conn].mean()
+        b = out["lat_c2m"][dev_conn].mean()
+        assert b == pytest.approx(a, rel=0.25)
+
+
+# ---------------------------------------------------------------------------
+# Graphs: bit-for-bit against the host path.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("config", ["baseline", "placeit"])
+def test_batched_graphs_bit_for_bit(config):
+    arch = paper_arch("homog32", config)
+    rep = HomogRep(arch, R=R, C=C)
+    rng = np.random.default_rng(0)
+    sols = [rep.random(rng) for _ in range(10)]
+    host = [rep.score_graph(s) for s in sols]
+    t = jnp.asarray(np.stack([s[0] for s in sols]))
+    r = jnp.asarray(np.stack([s[1] for s in sols]))
+    batch = build_score_graphs_batched(arch, R, C, t, r)
+    W = np.asarray(batch["W"])
+    E = np.asarray(batch["edges"])
+    M = np.asarray(batch["edge_mask"])
+    for i, g in enumerate(host):
+        assert np.array_equal(W[i], g.W)           # byte-identical weights
+        mine = {(int(u), int(v))
+                for (u, v), m in zip(E[i], M[i]) if m}
+        ref = {(int(u), int(v))
+               for (u, v), m in zip(g.edges, g.edge_mask) if m}
+        assert mine == ref
+        assert float(batch["area"][i]) == float(g.area)
+    # scorer-derived connectivity == host union-find connectivity
+    scorer = make_scorer(rep.layout, chunk=4)
+    out = {k: np.asarray(v) for k, v in scorer(batch).items()}
+    assert np.array_equal(out["connected"].astype(bool),
+                          np.array([g.connected for g in host]))
+    # identical metrics whether graphs were assembled on host or device
+    from repro.core.topology import stack_graphs
+    ref_out = {k: np.asarray(v) for k, v in scorer(stack_graphs(host)).items()}
+    for k in out:
+        np.testing.assert_array_equal(out[k], ref_out[k])
+
+
+# ---------------------------------------------------------------------------
+# Batched optimizers through the registry API.
+# ---------------------------------------------------------------------------
+
+def test_batched_optimizers_improve_and_return_valid_solutions():
+    cfg = ExperimentConfig(
+        arch="homog32",
+        algorithms=("br-batched", "ga-batched", "sa-batched"),
+        budget=Budget(evals=24), norm_samples=8, chunk=8,
+        params={"br-batched": {"batch": 8},
+                "ga-batched": {"population": 8, "elitism": 2,
+                               "tournament": 3},
+                "sa-batched": {"chains": 4}})
+    recs = run_experiment(cfg)
+    rep = HomogRep(ARCH, R=R, C=C)
+    for rec in recs:
+        res = rec.result
+        assert np.isfinite(res.best_cost)
+        assert res.n_evaluated >= 8
+        assert res.n_generated >= res.n_evaluated
+        types, rot = res.best_sol
+        assert types.dtype == np.int8 and types.shape == (R, C)
+        g = rep.score_graph((types, rot))          # host-path validation
+        assert g.connected
+        assert res.history and res.history[-1][2] == res.best_cost
+
+
+def test_device_pipeline_rejects_hetero():
+    arch = paper_arch("hetero32", "baseline")
+    rep = HeteroRep(arch)
+    ev = Evaluator(rep, arch, rng=np.random.default_rng(0), norm_samples=4,
+                   chunk=4)
+    with pytest.raises(TypeError, match="homogeneous"):
+        DevicePipeline(ev)
+
+
+def test_pipeline_resampling_counts_generated(rep):
+    """Mask-and-resample accounts resampled slots in n_generated, like the
+    host retry loop counts retried individuals."""
+    ev = Evaluator(rep, ARCH, rng=np.random.default_rng(0), norm_samples=8,
+                   chunk=8)
+    g0 = ev.n_generated
+    pipe = ev.pipeline()
+    t, r, metrics = pipe.sample_random(np.random.default_rng(1), 8)
+    assert metrics["connected"].astype(bool).all()
+    # baseline homog32 random placements are rarely connected: resampling
+    # must have generated strictly more than the 8 returned
+    assert ev.n_generated - g0 > 8

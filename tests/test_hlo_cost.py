@@ -5,7 +5,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.launch.hlo_cost import analyze_hlo, parse_module
+from repro.launch.hlo_cost import analyze_hlo, parse_module, xla_cost_analysis
 
 
 def compile_(f, *specs):
@@ -33,7 +33,7 @@ def test_scan_trip_count_multiplies():
     ws = jax.ShapeDtypeStruct((L, D, D), jnp.float32)
     c = compile_(f, x, ws)
     got = analyze_hlo(c.as_text(), 1)
-    xla = c.cost_analysis()["flops"]          # body counted once
+    xla = xla_cost_analysis(c)["flops"]       # body counted once
     assert got["flops"] >= L * 2 * 32 * D * D * 0.99
     assert got["flops"] >= xla * (L - 1)      # strictly trip-scaled
 
@@ -59,8 +59,10 @@ def test_scan_equals_unrolled():
 
 
 def test_matches_xla_on_unrolled_train_step():
-    """End-to-end: within 10% of XLA cost_analysis on a real (unrolled)
-    model train step (elementwise flops are the gap)."""
+    """End-to-end: close to XLA cost_analysis on a real (unrolled) model
+    train step (elementwise flops are the gap).  XLA introduces its own
+    while loops even in unrolled modules and counts their bodies once, so
+    the comparison disables trip scaling (``while_trips=False``)."""
     import functools
     from repro.configs import get_config
     from repro.models.model import build_model
@@ -78,8 +80,8 @@ def test_matches_xla_on_unrolled_train_step():
     batch = {"tokens": jax.ShapeDtypeStruct((2, 32), jnp.int32),
              "labels": jax.ShapeDtypeStruct((2, 32), jnp.int32)}
     c = jax.jit(step).lower(state, batch).compile()
-    mine = analyze_hlo(c.as_text(), 1)
-    xla = c.cost_analysis()
+    mine = analyze_hlo(c.as_text(), 1, while_trips=False)
+    xla = xla_cost_analysis(c)
     assert mine["flops"] == pytest.approx(xla["flops"], rel=0.12)
     assert mine["bytes"] == pytest.approx(xla["bytes accessed"], rel=0.35)
 

@@ -2,6 +2,8 @@
 import numpy as np
 import pytest
 
+from repro.core.api import (Budget, ExperimentConfig, baseline_cost,
+                            best_by_algorithm, run_experiment, summarize)
 from repro.core.baseline import MeshBaseline
 from repro.core.bridge import (TrafficSignature, codesign,
                                weights_from_signature)
@@ -10,7 +12,6 @@ from repro.core.netsim import ChipletNet, NetSim, Packet, synthetic_packets
 from repro.core.optimize import (Evaluator, best_random, genetic_algorithm,
                                  simulated_annealing)
 from repro.core.placement_homog import HomogRep
-from repro.core.runner import Experiment, best_by_algorithm, summarize
 from repro.core.traces import TraceRegion, generate_trace, trace_stats
 
 
@@ -41,12 +42,13 @@ def test_br_ga_sa_improve_over_single_random(ev):
 
 
 def test_runner_and_baseline():
-    exp = Experiment("homog32", "baseline", algorithms=("br",),
-                     repetitions=1, max_evals=12, norm_samples=8)
-    recs = exp.run()
+    cfg = ExperimentConfig("homog32", "baseline", algorithms=("br",),
+                           repetitions=1, budget=Budget(evals=12),
+                           norm_samples=8)
+    recs = run_experiment(cfg)
     rows = summarize(recs)
     assert rows and rows[0]["n_evaluated"] >= 12
-    bc, bm = exp.baseline_cost()
+    bc, bm = baseline_cost(cfg)
     assert np.isfinite(bc)
     best = best_by_algorithm(recs)
     assert "br" in best
