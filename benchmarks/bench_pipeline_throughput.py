@@ -17,9 +17,15 @@ three homogeneous grids for:
   (device).  On CPU both paths are Floyd-Warshall-bound, so this ratio
   mostly tracks the scorer; the prep ratio is the one the refactor targets.
 
+PR 3 extends the same measurement to the heterogeneous path (hetero32):
+host per-child corner placement + Kruskal MST vs the batched pipeline
+(device operators, vectorized host corner placement, batched Borůvka link
+inference + ScoreGraph assembly on device).
+
 Results go to stdout as BENCH lines and to
-``artifacts/bench/pipeline_throughput.json`` so future PRs have a perf
-trajectory.
+``artifacts/bench/pipeline_throughput.json``; ``benchmarks.run`` copies
+that to ``BENCH_pipeline_throughput.json`` at the repo root so the perf
+trajectory is versioned.
 """
 from __future__ import annotations
 
@@ -30,8 +36,9 @@ import time
 import jax
 import numpy as np
 
-from repro.core.chiplets import homogeneous_arch
+from repro.core.chiplets import homogeneous_arch, paper_arch
 from repro.core.optimize import DevicePipeline, Evaluator
+from repro.core.placement_hetero import HeteroRep
 from repro.core.placement_homog import HomogRep
 
 from .common import budget, emit, out_dir
@@ -119,6 +126,46 @@ def _e2e_rates(rep, arch, n: int, chunk: int) -> tuple[float, float]:
     return host, dev
 
 
+def _hetero_prep_rates(arch_name: str, n: int) -> tuple[float, float]:
+    """GA-generation production on a heterogeneous arch: host per-child
+    Python (merge + mutate + corner placement + Kruskal MST + ScoreGraph)
+    vs the batched path (fused device operators, vectorized host corner
+    placement, batched Borůvka link inference + assembly on device).
+    Returns (host_per_s, device_per_s)."""
+    arch = paper_arch(arch_name, "baseline")
+    rep = HeteroRep(arch)
+    rng = np.random.default_rng(0)
+    parents = [rep.random(rng) for _ in range(16)]
+
+    best = np.inf
+    for _ in range(3):
+        idx = rng.integers(len(parents), size=(n, 2))
+        t0 = time.perf_counter()
+        for a, b in idx:
+            child = rep.merge(parents[a], parents[b], rng)
+            if rng.random() < 0.5:
+                child = rep.mutate(child, rng)
+            rep.score_graph(child)
+        best = min(best, time.perf_counter() - t0)
+    host = n / best
+
+    _, _, _gen, _mut, _child = DevicePipeline._stages(rep)
+    idx = rng.integers(len(parents), size=(n, 2))
+    oa = np.stack([parents[a][0] for a, _ in idx])
+    ra = np.stack([parents[a][1] for a, _ in idx])
+    ob = np.stack([parents[b][0] for _, b in idx])
+    rb = np.stack([parents[b][1] for _, b in idx])
+    jax.block_until_ready(
+        _child(jax.random.PRNGKey(0), oa, ra, ob, rb, 0.5)[2]["W"])
+    best = np.inf
+    for i in range(1, 4):
+        t0 = time.perf_counter()
+        jax.block_until_ready(
+            _child(jax.random.PRNGKey(i), oa, ra, ob, rb, 0.5)[2]["W"])
+        best = min(best, time.perf_counter() - t0)
+    return host, n / best
+
+
 def run(quick: bool = True) -> dict:
     n = budget(quick, 48, 256)
     e2e_n = budget(quick, 16, 64)
@@ -146,6 +193,18 @@ def run(quick: bool = True) -> dict:
             emit(f"pipeline_{name}_e2e_speedup", round(d2 / h2, 2),
                  "incl. shared FW scorer (FW-bound on CPU; prep ratio is "
                  "the refactor's target)")
+    # heterogeneous path (PR 3): batched Borůvka link inference vs the
+    # per-child host Kruskal+union-find loop
+    hn = budget(quick, 32, 128)
+    hh, hd = _hetero_prep_rates("hetero32", hn)
+    results["hetero32"] = dict(host_prep_per_s=hh, device_prep_per_s=hd,
+                               prep_speedup=hd / hh, n_prep=hn)
+    emit("pipeline_hetero32_host_prep_per_s", round(hh, 1),
+         "per-child python merge+mutate+corner-place+kruskal+graph")
+    emit("pipeline_hetero32_device_prep_per_s", round(hd, 1),
+         "fused batched ops + vectorized corner place + Boruvka on device")
+    emit("pipeline_hetero32_prep_speedup", round(hd / hh, 1),
+         f"{hd / hh:.1f}x batched over host loop (target >= 3x)")
     # headline: the acceptance metric — GA-generation production on 8x8
     emit("pipeline_8x8_ga_generation_speedup",
          round(results["8x8"]["prep_speedup"], 1),

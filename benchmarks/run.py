@@ -2,13 +2,18 @@
 
   PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME]
 
-Emits ``BENCH,name,value,derived`` CSV lines (and JSON artifacts under
-artifacts/bench/).  Quick mode targets CI budgets; --full approaches the
-paper's budgets.
+Emits ``BENCH,name,value,derived`` CSV lines and JSON artifacts under
+artifacts/bench/; each module's artifact is additionally copied to
+``BENCH_<name>.json`` at the repo root so the perf trajectory is versioned
+alongside the code (artifacts/ is transient).  Quick mode targets CI
+budgets; --full approaches the paper's budgets.
 """
 from __future__ import annotations
 
 import argparse
+import glob
+import os
+import shutil
 import time
 import traceback
 
@@ -24,6 +29,28 @@ MODULES = [
 ]
 
 
+ARTIFACT_DIR = os.path.join("artifacts", "bench")
+
+
+def _snapshot() -> dict[str, float]:
+    return {p: os.path.getmtime(p)
+            for p in glob.glob(os.path.join(ARTIFACT_DIR, "*.json"))}
+
+
+def promote_artifacts(before: dict[str, float]) -> list[str]:
+    """Copy artifacts written/updated since ``before`` to the repo root as
+    ``BENCH_<stem>.json`` (the versioned perf trajectory)."""
+    promoted = []
+    for p in glob.glob(os.path.join(ARTIFACT_DIR, "*.json")):
+        if p in before and os.path.getmtime(p) <= before[p]:
+            continue
+        stem = os.path.splitext(os.path.basename(p))[0]
+        dst = f"BENCH_{stem}.json"
+        shutil.copyfile(p, dst)
+        promoted.append(dst)
+    return promoted
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
@@ -37,10 +64,14 @@ def main() -> None:
         mod = __import__(f"benchmarks.bench_{name}", fromlist=["main"])
         print(f"\n=== bench_{name}: {desc} ===", flush=True)
         t0 = time.monotonic()
+        before = _snapshot()
         try:
             mod.main(quick=not args.full)
+            promoted = promote_artifacts(before)
             print(f"=== bench_{name} done in "
-                  f"{time.monotonic() - t0:.1f}s ===", flush=True)
+                  f"{time.monotonic() - t0:.1f}s"
+                  + (f"; promoted {', '.join(promoted)}" if promoted else "")
+                  + " ===", flush=True)
         except Exception as e:  # noqa: BLE001 — keep the suite running
             failures.append(name)
             print(f"=== bench_{name} FAILED: {type(e).__name__}: {e} ===")

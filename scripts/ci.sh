@@ -1,7 +1,12 @@
 #!/usr/bin/env sh
-# Tier-1 CI: fast test pass (slow-marked tests excluded).
+# Tier-1 CI: fast test pass (slow-marked tests excluded) + a quick
+# pipeline-throughput bench smoke (set CI_SKIP_BENCH=1 to skip it).
 #   scripts/ci.sh [extra pytest args...]
 set -eu
 cd "$(dirname "$0")/.."
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
-    exec python -m pytest -q -m "not slow" "$@"
+    python -m pytest -q -m "not slow" "$@"
+if [ "${CI_SKIP_BENCH:-0}" != "1" ]; then
+    PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+        python -m benchmarks.run --only pipeline
+fi

@@ -24,10 +24,11 @@ Two execution styles coexist:
   cross-config fast path).
 * **Device-resident** (``best_random_batched`` / ``genetic_algorithm_batched``
   / ``simulated_annealing_batched``): whole generations / chain-blocks are
-  produced by :class:`DevicePipeline` as fused
-  generate→graph→score device calls over stacked arrays (homogeneous grids
-  only); invalid individuals are masked-and-resampled in batch using the
-  scorer's FW-derived ``connected`` output instead of retried one by one.
+  produced by :class:`DevicePipeline` as fused generate→graph→score batched
+  calls over stacked arrays — fully on device for homogeneous grids, with a
+  vectorized host corner-placement stage for heterogeneous archs — and
+  invalid individuals are masked-and-resampled in batch instead of retried
+  one by one.
 """
 from __future__ import annotations
 
@@ -40,9 +41,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from .cost import CostNormalizers, total_cost
+from .placement_hetero import HeteroRep
 from .placement_homog import HomogRep
 from .proxies import make_scorer
-from .topology import HomogGraphBatch, ScoreGraph, stack_graphs
+from .topology import (HeteroGraphBatch, HomogGraphBatch, ScoreGraph,
+                       stack_graphs)
 
 
 @dataclass
@@ -114,7 +117,7 @@ class Evaluator:
         return self.costs_from(metrics), metrics
 
     def pipeline(self) -> "DevicePipeline":
-        """Cached device-resident generate→graph→score pipeline (homog)."""
+        """Cached device-resident generate→graph→score pipeline."""
         if self._pipeline is None:
             self._pipeline = DevicePipeline(self)
         return self._pipeline
@@ -333,24 +336,31 @@ def simulated_annealing(ev: Evaluator, rng: np.random.Generator, *,
 # ---------------------------------------------------------------------------
 
 class DevicePipeline:
-    """Batched produce→graph→score path for homogeneous grids.
+    """Batched produce→graph→score path for both placement families.
 
-    Couples :class:`placement_homog.HomogBatch` (vectorized random / mutate /
-    merge), :class:`topology.HomogGraphBatch` (masked-selection link
-    inference + ScoreGraph assembly) and the Evaluator's cached jitted
-    scorer.  Each ``sample_*`` call produces a whole batch on device; the
-    scorer's FW-derived ``connected`` output masks invalid individuals,
-    which are resampled in batch (valid slots are kept) — the device
-    equivalent of the paper's retry-until-connected loop.
+    Couples the vectorized representation operators
+    (:class:`placement_homog.HomogBatch` / :class:`placement_hetero.
+    HeteroBatch`), the batched ScoreGraph assembly
+    (:class:`topology.HomogGraphBatch` with masked selection over the static
+    grid adjacency, or :class:`topology.HeteroGraphBatch` with the batched
+    Borůvka MST + augmentation over padded candidate edges) and the
+    Evaluator's cached jitted scorer.  Each ``sample_*`` call produces a
+    whole batch; invalid individuals are masked and resampled in batch
+    (valid slots are kept) — the device equivalent of the paper's
+    retry-until-connected loop.
 
-    The heterogeneous corner-placement path has data-dependent link
-    structure (MST over candidate edges) and stays host-side; it serves as
-    the sequential reference for equivalence testing.
+    Homogeneous grids run generate→graph fully on device.  The
+    heterogeneous corner placement is inherently sequential per individual
+    and stays host-side, but vectorized across the population
+    (``HeteroBatch.geometry_batch``); operators and link inference run on
+    device.  Connectivity masking uses the scorer's FW-derived
+    ``connected`` for grids and the Borůvka-component flag (identical to
+    the fixed host union-find rule) for hetero archs.
 
-    The jitted produce→graph stages only depend on the grid statics
-    (arch, R, C, mutation mode), so — like the jitted scorer behind
-    ``api.get_scorer`` — they are cached module-wide and shared by every
-    Evaluator over the same grid instead of re-traced per run.
+    The jitted produce→graph stages only depend on the arch statics
+    (grid dims, mutation mode), so — like the jitted scorer behind
+    ``api.get_scorer`` — they are cached module-wide per arch and shared by
+    every Evaluator over the same arch instead of re-traced per run.
     """
 
     _STAGE_CACHE: dict = {}
@@ -362,48 +372,108 @@ class DevicePipeline:
         cls._STAGE_CACHE.clear()
 
     @classmethod
-    def _stages(cls, rep: HomogRep):
-        key = (rep.arch, rep.R, rep.C, rep.mutation_mode)
+    def _stages(cls, rep):
+        if isinstance(rep, HomogRep):
+            key = ("homog", rep.arch, rep.R, rep.C, rep.mutation_mode)
+        elif isinstance(rep, HeteroRep):
+            key = ("hetero", rep.arch, rep.mutation_mode)
+        else:
+            raise TypeError(
+                "device-resident batched optimizers require a HomogRep or "
+                f"HeteroRep placement representation, got {type(rep)!r}")
         if key in cls._STAGE_CACHE:
             return cls._STAGE_CACHE[key]
         ops = rep.batch_ops()
-        gb = HomogGraphBatch(rep.arch, rep.R, rep.C)
+        if isinstance(rep, HomogRep):
+            gb = HomogGraphBatch(rep.arch, rep.R, rep.C)
 
-        @functools.partial(jax.jit, static_argnames=("n",))
-        def _gen(key, n):
-            t, r = ops.random_batch(key, n)
-            return t, r, gb.build(t, r)
+            @functools.partial(jax.jit, static_argnames=("n",))
+            def _gen(key, n):
+                t, r = ops.random_batch(key, n)
+                return t, r, gb.build(t, r)
 
-        @jax.jit
-        def _mut(key, t, r):
-            nt, nr = ops.mutate_batch(key, t, r)
-            return nt, nr, gb.build(nt, nr)
+            @jax.jit
+            def _mut(key, t, r):
+                nt, nr = ops.mutate_batch(key, t, r)
+                return nt, nr, gb.build(nt, nr)
 
-        @jax.jit
-        def _child(key, pat, par, pbt, pbr, p_mut):
-            k1, k2, k3 = jax.random.split(key, 3)
-            t, r = ops.merge_batch(k1, pat, par, pbt, pbr)
-            mt, mr = ops.mutate_batch(k2, t, r)
-            m = jax.random.bernoulli(k3, p_mut, (t.shape[0],))[:, None, None]
-            t = jnp.where(m, mt, t)
-            r = jnp.where(m, mr, r)
-            return t, r, gb.build(t, r)
+            @jax.jit
+            def _child(key, pat, par, pbt, pbr, p_mut):
+                k1, k2, k3 = jax.random.split(key, 3)
+                t, r = ops.merge_batch(k1, pat, par, pbt, pbr)
+                mt, mr = ops.mutate_batch(k2, t, r)
+                m = jax.random.bernoulli(
+                    k3, p_mut, (t.shape[0],))[:, None, None]
+                t = jnp.where(m, mt, t)
+                r = jnp.where(m, mr, r)
+                return t, r, gb.build(t, r)
+        else:
+            gb = HeteroGraphBatch(rep.arch)
+            _rand_op = jax.jit(ops.random_batch, static_argnums=1)
+            _mut_op = jax.jit(ops.mutate_batch)
+
+            @jax.jit
+            def _child_op(key, oa, ra, ob, rb, p_mut):
+                k1, k2, k3 = jax.random.split(key, 3)
+                o, r = ops.merge_batch(k1, oa, ra, ob, rb)
+                mo, mr = ops.mutate_batch(k2, o, r)
+                m = jax.random.bernoulli(k3, p_mut, (o.shape[0],))[:, None]
+                return jnp.where(m, mo, o), jnp.where(m, mr, r)
+
+            _build = jax.jit(gb.build)
+
+            def _graph(o, r):
+                # Host-side stage: corner placement is sequential per
+                # individual; vectorized across the population.
+                on, rn = np.asarray(o), np.asarray(r)
+                ppos, area = ops.geometry_batch(on, rn)
+                batch = dict(_build(jnp.asarray(ppos), jnp.asarray(area)))
+                ovf = np.asarray(batch.pop("overflow"))
+                if ovf.any():  # pragma: no cover - needs > Ecap candidates
+                    # Candidate set exceeded the device working set: take
+                    # the exact host path for the affected rows.
+                    batch = {k: np.array(v) for k, v in batch.items()}
+                    for b in np.nonzero(ovf)[0]:
+                        g = rep.score_graph((on[b], rn[b]))
+                        batch["W"][b] = g.W
+                        batch["edges"][b] = g.edges
+                        batch["edge_mask"][b] = g.edge_mask
+                        batch["area"][b] = g.area
+                        batch["connected"][b] = g.connected
+                return batch
+
+            def _gen(key, n):
+                o, r = _rand_op(key, n)
+                return o, r, _graph(o, r)
+
+            def _mut(key, o, r):
+                no, nr = _mut_op(key, o, r)
+                return no, nr, _graph(no, nr)
+
+            def _child(key, oa, ra, ob, rb, p_mut):
+                o, r = _child_op(key, oa, ra, ob, rb, p_mut)
+                return o, r, _graph(o, r)
 
         cls._STAGE_CACHE[key] = (ops, gb, _gen, _mut, _child)
         return cls._STAGE_CACHE[key]
 
     def __init__(self, ev: Evaluator):
-        if not isinstance(ev.rep, HomogRep):
-            raise TypeError(
-                "device-resident batched optimizers require a homogeneous "
-                "grid representation (HomogRep); the heterogeneous path "
-                "stays host-side — use the classic br/ga/sa algorithms")
         self.ev = ev
         (self.ops, self.graphs, self._gen, self._mut,
          self._child) = self._stages(ev.rep)
 
     def _key(self, rng: np.random.Generator):
         return jax.random.PRNGKey(int(rng.integers(2 ** 31 - 1)))
+
+    def _score_masked(self, batch: dict) -> dict:
+        """Score one produced batch; a graph stage's own ``connected``
+        (the hetero Borůvka-component flag) overrides the scorer's."""
+        gconn = batch.pop("connected", None)
+        metrics = {k: np.array(v) for k, v in
+                   self.ev.score_batch(batch).items()}
+        if gconn is not None:
+            metrics["connected"] = np.array(gconn)
+        return metrics
 
     def _until_connected(self, rng, make, n, max_rounds: int = 500):
         """Run ``make`` until every slot holds a connected placement.
@@ -415,10 +485,14 @@ class DevicePipeline:
         stages/scorer stays bounded — and each slot takes its first
         connected candidate (per-slot rejection sampling, the same
         conditional distribution as the host retry loop).
+
+        A graph stage may put its own ``connected`` into the batch dict
+        (the hetero path's Borůvka-component flag, which matches the host
+        union-find rule exactly); it then overrides the scorer's
+        FW-reachability output.
         """
         t, r, batch = make(self._key(rng), np.arange(n))
-        metrics = {k: np.array(v) for k, v in
-                   self.ev.score_batch(batch).items()}
+        metrics = self._score_masked(batch)
         self.ev.n_generated += n
         conn = metrics["connected"].astype(bool)
         for _ in range(max_rounds):
@@ -429,9 +503,9 @@ class DevicePipeline:
             size = min(max(size, min(8, n)), n)
             idx = bad[np.arange(size) % len(bad)]
             t2, r2, batch2 = make(self._key(rng), idx)
-            m2 = self.ev.score_batch(batch2)
+            m2 = self._score_masked(batch2)
             self.ev.n_generated += size
-            conn2 = np.asarray(m2["connected"]).astype(bool)
+            conn2 = m2["connected"].astype(bool)
             slots, rows = [], []
             for i in range(size):
                 s = int(idx[i])
@@ -590,7 +664,7 @@ def simulated_annealing_batched(ev: Evaluator, rng: np.random.Generator, *,
         ncosts = ev.costs_from(nm)
         res.n_evaluated += chains
         accept = _sa_accept(rng, ncosts - costs, temps)
-        acc = jnp.asarray(accept)[:, None, None]
+        acc = jnp.asarray(accept).reshape((-1,) + (1,) * (t.ndim - 1))
         t = jnp.where(acc, nt, t)
         r = jnp.where(acc, nr, r)
         costs = np.where(accept, ncosts, costs)

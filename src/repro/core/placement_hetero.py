@@ -22,6 +22,8 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from .chiplets import COMPUTE, IO, MEMORY, ArchSpec, Chiplet
@@ -71,8 +73,6 @@ def corner_place(dims: list[tuple[float, float]]
         cur_h = float((rects[:, 1] + rects[:, 3]).max())
         for (cx, cy) in cands:
             x, y = cx, cy
-            moved_up_last = cx > 0 and any(
-                abs(cx - (r[0] + r[2])) < 1e-9 for r in rects)
             ok = False
             for _ in range(4 * n):          # bounded resolution loop
                 j = _overlap(x, y, w, h, rects)
@@ -80,13 +80,16 @@ def corner_place(dims: list[tuple[float, float]]
                     ok = True
                     break
                 rx, ry, rw, rh = rects[j]
-                # Step 4: overlap on the right -> move to the top of the
-                # blocking rect; overlap on top -> move right.
-                if moved_up_last:
-                    y = ry + rh
-                else:
+                # Step 4, from the overlap geometry: a blocking rect whose
+                # bottom edge lies strictly above the candidate's bottom
+                # overlaps from *above* -> move right past it; otherwise the
+                # rect reaches the candidate's level, i.e. overlaps to the
+                # *right* -> move up on top of it.  Both moves strictly
+                # increase x or y, so the loop terminates.
+                if ry > y + 1e-9:
                     x = rx + rw
-                moved_up_last = not moved_up_last
+                else:
+                    y = ry + rh
             if not ok:
                 continue
             side = max(max(cur_w, x + w), max(cur_h, y + h))
@@ -97,6 +100,71 @@ def corner_place(dims: list[tuple[float, float]]
         _, x, y = best
         out[i] = (x, y)
         rects = np.concatenate([rects, [[x, y, w, h]]])
+    return out
+
+
+def corner_place_batch(dims: np.ndarray) -> np.ndarray:
+    """Vectorized :func:`corner_place` across a population.
+
+    ``dims`` is [B, N, 2] (w, h) per chiplet in placement order; returns
+    [B, N, 2] lower-left positions.  The algorithm is inherently sequential
+    per individual — each chiplet's candidate anchors depend on all earlier
+    placements — so this runs the same N placement steps, but array-at-a-time
+    across the whole population.  Bit-for-bit identical to the scalar path:
+    the overlap-resolution moves are the same, and although candidates are
+    enumerated in a different order, equal selection keys imply equal
+    positions, so the lexicographic minimum is order-independent.
+    """
+    B, N, _ = dims.shape
+    out = np.zeros((B, N, 2), dtype=np.float64)
+    rects = np.zeros((B, N, 4), dtype=np.float64)
+    rects[:, 0, 2:] = dims[:, 0]
+    b_idx = np.arange(B)
+    for i in range(1, N):
+        wv = dims[:, i, 0][:, None]                      # [B, 1]
+        hv = dims[:, i, 1][:, None]
+        placed = rects[:, :i]                            # [B, i, 4]
+        right = np.stack([placed[:, :, 0] + placed[:, :, 2],
+                          placed[:, :, 1]], axis=-1)
+        top = np.stack([placed[:, :, 0],
+                        placed[:, :, 1] + placed[:, :, 3]], axis=-1)
+        cands = np.concatenate(
+            [np.zeros((B, 1, 2)), right, top], axis=1)   # [B, K, 2]
+        x = cands[:, :, 0].copy()
+        y = cands[:, :, 1].copy()
+        ok = np.zeros(x.shape, dtype=bool)
+        rx = placed[:, None, :, 0]
+        ry = placed[:, None, :, 1]
+        rw = placed[:, None, :, 2]
+        rh = placed[:, None, :, 3]
+        for _ in range(4 * N):                           # bounded resolution
+            ov = ((x[:, :, None] < rx + rw - 1e-9)
+                  & (rx < x[:, :, None] + wv[:, :, None] - 1e-9)
+                  & (y[:, :, None] < ry + rh - 1e-9)
+                  & (ry < y[:, :, None] + hv[:, :, None] - 1e-9))
+            any_ov = ov.any(-1)
+            ok |= ~any_ov
+            pending = any_ov & ~ok
+            if not pending.any():
+                break
+            blk = placed[b_idx[:, None], ov.argmax(-1)]  # first overlap [B,K,4]
+            move_right = blk[:, :, 1] > y + 1e-9         # blocker above anchor
+            nx = np.where(move_right, blk[:, :, 0] + blk[:, :, 2], x)
+            ny = np.where(move_right, y, blk[:, :, 1] + blk[:, :, 3])
+            x = np.where(pending, nx, x)
+            y = np.where(pending, ny, y)
+        cur_w = (placed[:, :, 0] + placed[:, :, 2]).max(1)[:, None]
+        cur_h = (placed[:, :, 1] + placed[:, :, 3]).max(1)[:, None]
+        side = np.maximum(np.maximum(cur_w, x + wv), np.maximum(cur_h, y + hv))
+        k0 = np.where(ok, side, np.inf)
+        k1 = np.where(ok, x + y, np.inf)
+        k2 = np.where(ok, y, np.inf)
+        k3 = np.where(ok, x, np.inf)
+        sel = np.lexsort((k3, k2, k1, k0))[:, 0]         # primary key: k0
+        assert ok[b_idx, sel].all()
+        xi, yi = x[b_idx, sel], y[b_idx, sel]
+        out[:, i, 0], out[:, i, 1] = xi, yi
+        rects[:, i] = np.stack([xi, yi, dims[:, i, 0], dims[:, i, 1]], axis=-1)
     return out
 
 
@@ -236,3 +304,186 @@ class HeteroRep:
         geo = self.geometry(sol)
         _, connected = infer_links_mst(self.arch, geo)
         return connected
+
+    def batch_ops(self) -> "HeteroBatch":
+        """Cached vectorized (device-resident) operators for this arch."""
+        if not hasattr(self, "_batch_ops"):
+            self._batch_ops = HeteroBatch(self)
+        return self._batch_ops
+
+
+# ---------------------------------------------------------------------------
+# Device-resident batched operators.
+#
+# Mirrors placement_homog.HomogBatch for the heterogeneous representation:
+# the host operators above generate/mutate/merge one (order, rots) pair at a
+# time; HeteroBatch makes the same decisions as pure JAX array ops over
+# stacked [B, N] arrays keyed by a PRNG key.  Equivalence with the host
+# operators is *distributional* — every random choice is uniform over the
+# same candidate set — not bit-for-bit (different RNG streams).  The corner
+# placement itself is inherently sequential per individual and stays
+# host-side, but vectorized across the population (geometry_batch /
+# corner_place_batch).
+# ---------------------------------------------------------------------------
+
+_KINDS3 = (COMPUTE, MEMORY, IO)
+_SWAP_TRIES = 128     # host caps at 100 sequential tries; pre-drawn here
+_ROT_DRAW = 12        # lcm of possible |allowed_rotations| in {1, 2, 3, 4, 6}
+
+
+class HeteroBatch:
+    """Vectorized ``random/mutate/merge`` + batch geometry for one arch."""
+
+    def __init__(self, rep: HeteroRep):
+        self.rep = rep
+        self.N = len(rep.arch.chiplets)
+        self.Vp = int(rep._phy_base[-1])
+        fill = [k for k, ids in rep._kind_instances.items() for _ in ids]
+        self._kinds_fill = jnp.asarray(np.array(fill, dtype=np.int8))
+        self._counts = np.array(
+            [len(rep._kind_instances.get(k, ())) for k in _KINDS3], np.int32)
+        # Per-kind non-isomorphic rotation sets (Fig. 8), as padded tables.
+        rot_table = np.zeros((3, 4), np.int8)
+        rot_count = np.ones(3, np.int32)
+        allowed = np.zeros((3, 4), bool)
+        for k, rl in rep._allowed_rot.items():
+            rot_table[k, :len(rl)] = rl
+            rot_count[k] = len(rl)
+            allowed[k, list(rl)] = True
+        self._rot_table = jnp.asarray(rot_table)
+        self._rot_count = jnp.asarray(rot_count)
+        self._allowed_mask = jnp.asarray(allowed)
+        self._multi_rot = jnp.asarray(rot_count > 1)
+        # Rotated geometry tables (host-side, float64 like corner_place).
+        self._pmax = max(ch.n_phys() for ch in rep.arch.chiplets)
+        self._dims_table = np.zeros((3, 4, 2), np.float64)
+        self._phys_table = np.zeros((3, 4, self._pmax, 2), np.float64)
+        self._nphys_kind = np.zeros(3, np.int64)
+        for k, proto in rep._proto.items():
+            self._nphys_kind[k] = proto.n_phys()
+            for r in range(4):
+                ch = proto.rotated(r)
+                self._dims_table[k, r] = (ch.w, ch.h)
+                self._phys_table[k, r, :len(ch.phys)] = ch.phys
+
+    # -- rotation draws ------------------------------------------------------
+    def _uniform_rot(self, key, kind: jnp.ndarray) -> jnp.ndarray:
+        """Uniform draw from each position's allowed-rotation set.  Exact:
+        the draw range is a multiple of every possible set size."""
+        draws = jax.random.randint(key, kind.shape, 0, _ROT_DRAW)
+        return self._rot_table[kind, draws % self._rot_count[kind]]
+
+    def _onehot(self, idx: jnp.ndarray, flag: jnp.ndarray) -> jnp.ndarray:
+        return (jnp.arange(self.N)[None, :] == idx[:, None]) & flag[:, None]
+
+    # -- the representation functions, batched -------------------------------
+    def random_batch(self, key, n: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """n independent uniform (order, rots): a random permutation of the
+        chiplet-kind multiset, rotations uniform over each kind's set."""
+        k1, k2 = jax.random.split(key)
+        keys = jax.random.split(k1, n)
+        order = jax.vmap(
+            lambda k: jax.random.permutation(k, self._kinds_fill))(keys)
+        rots = self._uniform_rot(k2, order.astype(jnp.int32))
+        return order, rots
+
+    def mutate_batch(self, key, order, rots
+                     ) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """Batched ``mutate``: per individual either a swap of two
+        differing-type positions or a re-roll of one multi-rotation chiplet
+        (or both, per ``mutation_mode``), host first-valid-try semantics."""
+        B = order.shape[0]
+        both = self.rep.mutation_mode.endswith("both")
+        kcoin, ki, kj, kfix, kpick, krot = jax.random.split(key, 6)
+        if both:
+            do_swap = jnp.ones(B, bool)
+            do_rot = jnp.ones(B, bool)
+        else:
+            do_swap = jax.random.bernoulli(kcoin, 0.5, (B,))
+            do_rot = ~do_swap
+        # Pre-drawn swap tries; the first valid one is the host's accepted
+        # draw (identical first-success distribution).
+        i = jax.random.randint(ki, (B, _SWAP_TRIES), 0, self.N)
+        j = jax.random.randint(kj, (B, _SWAP_TRIES), 0, self.N)
+        oi = jnp.take_along_axis(order, i, axis=1)
+        oj = jnp.take_along_axis(order, j, axis=1)
+        valid = oi != oj
+        first = jnp.argmax(valid, axis=1)
+        sel = lambda a: jnp.take_along_axis(a, first[:, None], axis=1)[:, 0]
+        do_it = do_swap & valid.any(axis=1)
+        s1 = jnp.where(do_it, sel(i), 0)
+        s2 = jnp.where(do_it, sel(j), 0)       # s1 == s2 == 0 -> no-op swap
+        b = jnp.arange(B)
+        o1, o2 = order[b, s1], order[b, s2]
+        order2 = order.at[b, s1].set(o2).at[b, s2].set(o1)
+        r1, r2 = rots[b, s1], rots[b, s2]
+        rots2 = rots.at[b, s1].set(r2).at[b, s2].set(r1)
+        kind = order2.astype(jnp.int32)
+        # Host fixes swapped rotations only when illegal for the new kind.
+        swapped = self._onehot(s1, do_it) | self._onehot(s2, do_it)
+        legal = self._allowed_mask[kind, rots2.astype(jnp.int32)]
+        rots2 = jnp.where(swapped & ~legal,
+                          self._uniform_rot(kfix, kind), rots2)
+        # Rotation move: uniform pick among multi-rotation positions.
+        multi = self._multi_rot[kind]
+        g = jax.random.gumbel(kpick, (B, self.N))
+        pick = jnp.argmax(jnp.where(multi, g, -jnp.inf), axis=1)
+        upd = self._onehot(pick, do_rot & multi.any(axis=1))
+        rots2 = jnp.where(upd, self._uniform_rot(krot, kind), rots2)
+        return order2, rots2.astype(rots.dtype)
+
+    def merge_batch(self, key, oa, ra, ob, rb
+                    ) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """Batched Fig. 10 merge: carry agreeing types, distribute leftover
+        chiplets uniformly over disagreeing positions (random-rank fill ==
+        host's shuffled fill), carry rotations only where both agree."""
+        B = oa.shape[0]
+        k1, k2 = jax.random.split(key)
+        match = oa == ob
+        carried = jnp.where(match, oa, -2)
+        rem = [self._counts[k] - (carried == k).sum(axis=1) for k in range(3)]
+        prio = jax.random.uniform(k1, (B, self.N))
+        prio = jnp.where(match, 2.0, prio)     # matched positions rank last
+        rank = jnp.argsort(jnp.argsort(prio, axis=1), axis=1)
+        c0 = rem[0][:, None]
+        c1 = c0 + rem[1][:, None]
+        fill = jnp.where(rank < c0, COMPUTE,
+                         jnp.where(rank < c1, MEMORY, IO))
+        order = jnp.where(match, oa, fill.astype(oa.dtype))
+        rmatch = match & (ra == rb)
+        rots = jnp.where(rmatch, ra,
+                         self._uniform_rot(k2, order.astype(jnp.int32)))
+        return order, rots.astype(ra.dtype)
+
+    # -- batch geometry (host-side numpy; sequential only over N) ------------
+    def geometry_batch(self, order: np.ndarray, rots: np.ndarray
+                       ) -> tuple[np.ndarray, np.ndarray]:
+        """Stacked [B, N] (order, rots) -> (PHY positions [B, Vp, 2] float32,
+        areas [B] float32).  Bit-for-bit equal to ``HeteroRep.geometry`` per
+        individual (same corner placement, same float32 rounding)."""
+        order = np.asarray(order, dtype=np.int64)
+        rots = np.asarray(rots, dtype=np.int64)
+        B, N = order.shape
+        dims = self._dims_table[order, rots]                 # [B, N, 2]
+        pos = corner_place_batch(dims)
+        inst = np.zeros((B, N), np.int64)
+        for k, ids in self.rep._kind_instances.items():
+            if not ids:
+                continue
+            mk = order == k
+            rank = np.cumsum(mk, axis=1) - 1
+            ids_a = np.asarray(ids)
+            inst = np.where(mk, ids_a[np.clip(rank, 0, len(ids_a) - 1)], inst)
+        offs = self._phys_table[order, rots]                 # [B, N, P, 2]
+        cnt = self._nphys_kind[order]                        # [B, N]
+        base = self.rep._phy_base[:-1][inst]                 # [B, N]
+        li = np.arange(self._pmax)
+        gi = base[:, :, None] + li[None, None, :]
+        live = li[None, None, :] < cnt[:, :, None]
+        coords = (pos[:, :, None, :] + offs).astype(np.float32)
+        ppos = np.zeros((B, self.Vp, 2), np.float32)
+        b_idx = np.broadcast_to(np.arange(B)[:, None, None], gi.shape)
+        ppos[b_idx[live], gi[live]] = coords[live]
+        area = ((pos[:, :, 0] + dims[:, :, 0]).max(axis=1)
+                * (pos[:, :, 1] + dims[:, :, 1]).max(axis=1))
+        return ppos, area.astype(np.float32)

@@ -133,22 +133,19 @@ def infer_links_mst(arch: ArchSpec, geo: PlacedPhys,
         if uf.union(p, q):
             links.append((p, q))
             phy_used[p] = phy_used[q] = True
-    # Connectivity: every chiplet's component must be the same.
-    roots = {uf.find(int(np.nonzero(geo.owner == c)[0][0]))
-             for c in np.unique(geo.owner)}
-    # A chiplet with several PHYs and no relay: its PHYs are separate UF nodes;
-    # the chiplet counts as connected if ANY of its PHYs is in the main
-    # component.  Compute per-chiplet connectivity against the largest root.
+    # Connectivity: some single component must contain at least one PHY of
+    # every chiplet.  (A chiplet with several PHYs and no relay has its PHYs
+    # in separate UF nodes; any one of them inside the common component
+    # suffices.  Checking only the component with the most PHYs is wrong: a
+    # smaller component can be the one touching every chiplet.)
     comp_of_phy = np.array([uf.find(p) for p in range(Vp)])
-    main = np.bincount(comp_of_phy).argmax()
-    connected = True
-    for c in np.unique(geo.owner):
-        idx = np.nonzero(geo.owner == c)[0]
-        if not np.any(comp_of_phy[idx] == main):
-            connected = False
+    owners = np.unique(geo.owner)
+    connected = False
+    for root in np.unique(comp_of_phy):
+        members = comp_of_phy == root
+        if all(members[geo.owner == c].any() for c in owners):
+            connected = True
             break
-    if len(roots) > 1 and not connected:
-        pass  # fall through; caller will retry the generating operation
     # Augmentation: add remaining candidates joining two unused PHYs.
     for d, p, q in cands:
         if not phy_used[p] and not phy_used[q] and (p, q) not in links:
@@ -352,3 +349,182 @@ def build_score_graphs_batched(arch: ArchSpec, R: int, C: int,
                                types, rot) -> dict:
     """One-shot convenience wrapper around :class:`HomogGraphBatch`."""
     return HomogGraphBatch(arch, R, C).build(types, rot)
+
+
+# ---------------------------------------------------------------------------
+# Batched ScoreGraph assembly for heterogeneous placements.
+#
+# §VI-A link inference as fixed-shape array ops.  Unlike the grid, the
+# candidate-link structure is data-dependent (pairwise PHY distances of a
+# corner placement), so the host path runs Kruskal + union-find per
+# individual.  Here the same result is computed on device:
+#
+# * a padded candidate-edge tensor over the *static* cross-chiplet PHY
+#   pairs (row-major p < q order, exactly the host's np.nonzero
+#   enumeration); per placement an edge is valid iff its length is within
+#   max_link_mm;
+# * per placement, candidates get distinct integer weights: their rank
+#   under a stable sort by length (ties broken by enumeration order) —
+#   precisely the order the host's stable Kruskal consumes.  With distinct
+#   weights the MST is unique, so a batched Boruvka (log2 rounds of
+#   per-component min-edge selection + pointer-jumping star contraction)
+#   returns bit-for-bit the host's Kruskal edge set.  The host's weight-0
+#   relay-internal edges are pre-merged into the initial component labels;
+# * the paper's greedy augmentation (remaining candidates joining two
+#   still-unused PHYs, in weight order) is a masked argmin scan — at most
+#   Vp // 2 additions, each round taking the globally cheapest eligible
+#   edge, which is exactly the sequential scan's acceptance set;
+# * ``connected`` is derived from the final component labels with the same
+#   rule as the (fixed) host check: some single component must contain at
+#   least one PHY of every chiplet.  It is returned in the batch dict so
+#   the device pipeline can mask-and-resample without trusting the
+#   scorer's FW-reachability flag (subtly laxer on multi-PHY non-relay
+#   chiplets).
+# ---------------------------------------------------------------------------
+
+
+class HeteroGraphBatch:
+    """Batched ``PHY positions -> stacked ScoreGraph arrays`` for one arch."""
+
+    def __init__(self, arch: ArchSpec):
+        self.arch = arch
+        n = len(arch.chiplets)
+        phy_base = np.zeros(n + 1, dtype=np.int64)
+        for i, ch in enumerate(arch.chiplets):
+            phy_base[i + 1] = phy_base[i] + ch.n_phys()
+        Vp = int(phy_base[-1])
+        self.Vp, self.N, self.V = Vp, n, Vp + 2 * n
+        self.e_max = 2 * Vp
+        self.L = Vp                   # undirected link slots (== host e_max/2)
+        owner = np.zeros(Vp, dtype=np.int64)
+        for i in range(n):
+            owner[phy_base[i]:phy_base[i + 1]] = i
+        # Static candidate pairs, row-major upper-triangle (host order).
+        pp, qq = np.nonzero(np.triu(np.ones((Vp, Vp), bool), k=1)
+                            & (owner[:, None] != owner[None, :]))
+        self.E = len(pp)
+        self._u = jnp.asarray(pp.astype(np.int32))
+        self._v = jnp.asarray(qq.astype(np.int32))
+        # Working set: only the Ecap cheapest candidates enter the Borůvka /
+        # augmentation scans.  Valid (<= max_link_mm) edges are sparse —
+        # empirically < 5 * Vp even on dense corner placements — so 8 * Vp
+        # leaves ample margin; the overflow flag triggers the exact host
+        # fallback in the pipeline should a placement ever exceed it.
+        self.Ecap = int(min(self.E, 8 * Vp))
+        # Initial components: relay-internal (weight-0) unions pre-applied.
+        comp0 = np.arange(Vp)
+        for c in range(n):
+            if arch.chiplets[c].relay:
+                idx = np.nonzero(owner == c)[0]
+                comp0[idx] = idx[0]
+        self._comp0 = jnp.asarray(comp0.astype(np.int32))
+        n_comp = len(np.unique(comp0))
+        self._bor_rounds = max(1, int(np.ceil(np.log2(max(n_comp, 2)))))
+        self._jump_rounds = int(np.ceil(np.log2(max(Vp, 2)))) + 1
+        self._aug_rounds = Vp // 2
+        self._owner_oh = jnp.asarray(owner[:, None] == np.arange(n)[None, :])
+        # Static part of W: diagonal, internal relay edges, virtual edges.
+        W = np.full((self.V, self.V), INF, dtype=np.float32)
+        np.fill_diagonal(W, 0.0)
+        lr = np.float32(arch.latency.l_relay)
+        for c in range(n):
+            idx = np.nonzero(owner == c)[0]
+            if arch.chiplets[c].relay:
+                for a in range(len(idx)):
+                    for b2 in range(a + 1, len(idx)):
+                        p, q = int(idx[a]), int(idx[b2])
+                        W[p, q] = min(W[p, q], lr)
+                        W[q, p] = min(W[q, p], lr)
+            W[Vp + c, idx] = 0.0
+            W[idx, Vp + n + c] = 0.0
+        self._W_static = jnp.asarray(W)
+        self._d2d = np.float32(arch.latency.d2d_cost())
+        self._max_link = np.float32(arch.max_link_mm + 1e-9)
+
+    # -- per-placement link inference (vmapped in build) ---------------------
+    def _links_one(self, pos: jnp.ndarray):
+        """pos [Vp, 2] -> (links [Ecap] bool, eu/ev [Ecap], comp [Vp],
+        overflow bool).  Edges are compacted to the Ecap cheapest candidates
+        (stable (length, enum-order) sort), so their index IS the distinct
+        Kruskal rank."""
+        u, v, Ec, Vp = self._u, self._v, self.Ecap, self.Vp
+        d = pos[u] - pos[v]
+        if self.arch.distance == "manhattan":
+            dist = jnp.abs(d).sum(-1)
+        else:
+            dist = jnp.sqrt((d ** 2).sum(-1))
+        valid = dist <= self._max_link
+        overflow = valid.sum() > Ec
+        srt = jnp.argsort(jnp.where(valid, dist, jnp.inf))[:Ec]
+        eu, ev = u[srt], v[srt]
+        evalid = valid[srt]
+        rank = jnp.arange(Ec, dtype=jnp.int32)
+        node = jnp.arange(Vp, dtype=jnp.int32)
+        comp = self._comp0
+        sel = jnp.zeros(Ec, bool)
+        for _ in range(self._bor_rounds):
+            cu, cv = comp[eu], comp[ev]
+            cross = evalid & (cu != cv)
+            r = jnp.where(cross, rank, Ec)
+            best = jnp.full(Vp, Ec, jnp.int32).at[cu].min(r).at[cv].min(r)
+            min_u = cross & (rank == best[cu])    # unique per component:
+            min_v = cross & (rank == best[cv])    # ranks are distinct
+            sel = sel | min_u | min_v
+            ptr = node
+            ptr = ptr.at[jnp.where(min_u, cu, Vp)].set(cv, mode="drop")
+            ptr = ptr.at[jnp.where(min_v, cv, Vp)].set(cu, mode="drop")
+            # Star contraction: break the 2-cycles, then pointer-jump.
+            ptr = jnp.where((ptr[ptr] == node) & (node < ptr), node, ptr)
+            for _ in range(self._jump_rounds):
+                ptr = ptr[ptr]
+            comp = ptr[comp]
+        # Greedy augmentation: repeatedly take the cheapest candidate whose
+        # endpoint PHYs are both unused (== the host's sorted scan).
+        used = jnp.zeros(Vp, bool)
+        used = used.at[jnp.where(sel, eu, Vp)].set(True, mode="drop")
+        used = used.at[jnp.where(sel, ev, Vp)].set(True, mode="drop")
+
+        def aug_round(_, carry):
+            used, aug = carry
+            elig = evalid & ~sel & ~aug & ~used[eu] & ~used[ev]
+            r = jnp.where(elig, rank, Ec)
+            e = jnp.argmin(r)
+            take = r[e] < Ec
+            aug = aug.at[e].max(take)
+            used = used.at[eu[e]].max(take).at[ev[e]].max(take)
+            return used, aug
+
+        _, aug = jax.lax.fori_loop(0, self._aug_rounds, aug_round,
+                                   (used, jnp.zeros(Ec, bool)))
+        return sel | aug, eu, ev, comp, overflow
+
+    def _graph_one(self, pos: jnp.ndarray):
+        links, eu, ev, comp, overflow = self._links_one(pos)
+        # Compact chosen links into fixed slots (weight order; the scorer is
+        # edge-order invariant, and padding is zeroed like the host's).
+        rank = jnp.arange(self.Ecap, dtype=jnp.int32)
+        order_idx = jnp.argsort(jnp.where(links, rank, self.Ecap))[:self.L]
+        smask = jnp.arange(self.L) < links.sum()
+        su = jnp.where(smask, eu[order_idx], 0)
+        sv = jnp.where(smask, ev[order_idx], 0)
+        vals = jnp.where(smask, self._d2d, INF)       # INF scatter-min: no-op
+        W = self._W_static.at[su, sv].min(vals).at[sv, su].min(vals)
+        edges = jnp.stack([jnp.stack([su, sv], axis=-1),
+                           jnp.stack([sv, su], axis=-1)],
+                          axis=1).reshape(self.e_max, 2).astype(jnp.int32)
+        mask = jnp.repeat(smask, 2)
+        # Fixed host connectivity rule: one component covers every chiplet.
+        cov = jnp.zeros((self.Vp, self.N), bool).at[comp].max(self._owner_oh)
+        connected = cov.all(axis=1).any()
+        return W, edges, mask, connected, overflow
+
+    def build(self, ppos: jnp.ndarray, area: jnp.ndarray) -> dict:
+        """[B, Vp, 2] PHY positions + [B] areas -> batched ScoreGraph arrays:
+        stack_graphs keys plus the component-derived ``connected`` [B] and
+        an ``overflow`` [B] flag (candidate count above Ecap; the caller
+        must recompute those rows host-side — they are vanishingly rare).
+        jit/vmap-able."""
+        W, edges, mask, conn, ovf = jax.vmap(self._graph_one)(ppos)
+        return dict(W=W, edges=edges, edge_mask=mask,
+                    area=jnp.asarray(area, jnp.float32), connected=conn,
+                    overflow=ovf)

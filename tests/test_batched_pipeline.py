@@ -14,6 +14,11 @@ Three layers of equivalence:
 * **optimizers** — br/ga/sa-batched run through the registry API, improve
   over a single random placement, and return host-format solutions that
   the host path verifies as valid.
+
+The heterogeneous section mirrors all three layers for the corner-placement
+representation: HeteroBatch operators, the batched Borůvka link inference
+(bit-for-bit vs the fixed host MST path, including the component-derived
+``connected``), and the batched optimizers end-to-end on hetero32.
 """
 import jax
 import jax.numpy as jnp
@@ -26,7 +31,8 @@ from repro.core.optimize import DevicePipeline, Evaluator
 from repro.core.placement_hetero import HeteroRep
 from repro.core.placement_homog import HomogRep
 from repro.core.proxies import make_scorer
-from repro.core.topology import HomogGraphBatch, build_score_graphs_batched
+from repro.core.topology import (HeteroGraphBatch, HomogGraphBatch,
+                                 build_score_graphs_batched)
 
 ARCH = paper_arch("homog32", "baseline")
 R, C = 8, 5
@@ -190,13 +196,9 @@ def test_batched_optimizers_improve_and_return_valid_solutions():
         assert res.history and res.history[-1][2] == res.best_cost
 
 
-def test_device_pipeline_rejects_hetero():
-    arch = paper_arch("hetero32", "baseline")
-    rep = HeteroRep(arch)
-    ev = Evaluator(rep, arch, rng=np.random.default_rng(0), norm_samples=4,
-                   chunk=4)
-    with pytest.raises(TypeError, match="homogeneous"):
-        DevicePipeline(ev)
+def test_device_pipeline_rejects_unknown_rep():
+    with pytest.raises(TypeError, match="HomogRep or HeteroRep"):
+        DevicePipeline._stages(object())
 
 
 def test_pipeline_resampling_counts_generated(rep):
@@ -211,3 +213,135 @@ def test_pipeline_resampling_counts_generated(rep):
     # baseline homog32 random placements are rarely connected: resampling
     # must have generated strictly more than the 8 returned
     assert ev.n_generated - g0 > 8
+
+
+# ---------------------------------------------------------------------------
+# Heterogeneous path: batched operators, Borůvka link inference, pipeline.
+# ---------------------------------------------------------------------------
+
+HARCH = paper_arch("hetero32", "baseline")
+HN = 40
+
+
+@pytest.fixture(scope="module")
+def hrep():
+    return HeteroRep(HARCH)
+
+
+@pytest.fixture(scope="module")
+def hops(hrep):
+    return hrep.batch_ops()
+
+
+def assert_valid_hetero_batch(hrep, o, r):
+    for b in range(o.shape[0]):
+        assert counts_of(o[b]) == {COMPUTE: 32, MEMORY: 4, IO: 4}
+        for k, rr in zip(o[b], r[b]):
+            assert int(rr) in hrep._allowed_rot[int(k)]
+
+
+def test_hetero_random_batch_invariants(hrep, hops):
+    o, r = jax.jit(hops.random_batch, static_argnums=1)(
+        jax.random.PRNGKey(0), 24)
+    assert o.dtype == jnp.int8 and o.shape == (24, HN)
+    assert_valid_hetero_batch(hrep, np.asarray(o), np.asarray(r))
+
+
+def test_hetero_mutate_batch_invariants(hrep, hops):
+    o, r = hops.random_batch(jax.random.PRNGKey(1), 24)
+    mo, mr = jax.jit(hops.mutate_batch)(jax.random.PRNGKey(2), o, r)
+    assert_valid_hetero_batch(hrep, np.asarray(mo), np.asarray(mr))
+    changed = (np.asarray(mo) != np.asarray(o)).any(axis=1) \
+        | (np.asarray(mr) != np.asarray(r)).any(axis=1)
+    assert changed.any()
+
+
+def test_hetero_merge_batch_carries_matches(hrep, hops):
+    oa, ra = hops.random_batch(jax.random.PRNGKey(3), 24)
+    ob, rb = hops.random_batch(jax.random.PRNGKey(4), 24)
+    og, rg = jax.jit(hops.merge_batch)(jax.random.PRNGKey(5), oa, ra, ob, rb)
+    assert_valid_hetero_batch(hrep, np.asarray(og), np.asarray(rg))
+    oa_, ob_, og_ = np.asarray(oa), np.asarray(ob), np.asarray(og)
+    ra_, rb_, rg_ = np.asarray(ra), np.asarray(rb), np.asarray(rg)
+    for b in range(24):
+        match = oa_[b] == ob_[b]
+        assert (og_[b][match] == oa_[b][match]).all()
+        rmatch = match & (ra_[b] == rb_[b])
+        assert (rg_[b][rmatch] == ra_[b][rmatch]).all()
+
+
+def test_hetero_random_batch_matches_host_distribution(hrep, hops):
+    """Connectivity rate of raw random placements agrees between the host
+    operator (fixed corner placement + MST) and the device operator + the
+    batched Borůvka (same distribution, different RNG streams)."""
+    n = 64
+    host_rng = np.random.default_rng(21)
+    host_conn = np.array([hrep.is_connected(hrep.random(host_rng))
+                          for _ in range(n)])
+    o, r = hops.random_batch(jax.random.PRNGKey(22), n)
+    ppos, area = hops.geometry_batch(np.asarray(o), np.asarray(r))
+    gb = HeteroGraphBatch(HARCH)
+    dev_conn = np.asarray(
+        gb.build(jnp.asarray(ppos), jnp.asarray(area))["connected"])
+    p = host_conn.mean()
+    sigma = np.sqrt(max(p * (1 - p), 1e-4) / n)
+    assert abs(dev_conn.mean() - p) < 4 * sigma + 2 / n
+
+
+@pytest.mark.parametrize("config", ["baseline", "placeit"])
+def test_hetero_batched_graphs_bit_for_bit(config):
+    arch = paper_arch("hetero32", config)
+    rep = HeteroRep(arch)
+    ops = rep.batch_ops()
+    gb = HeteroGraphBatch(arch)
+    rng = np.random.default_rng(0)
+    sols = [rep.random(rng) for _ in range(8)]
+    host = [rep.score_graph(s) for s in sols]
+    ppos, area = ops.geometry_batch(np.stack([s[0] for s in sols]),
+                                    np.stack([s[1] for s in sols]))
+    batch = {k: np.asarray(v)
+             for k, v in gb.build(jnp.asarray(ppos),
+                                  jnp.asarray(area)).items()}
+    assert not batch.pop("overflow").any()
+    for i, g in enumerate(host):
+        assert np.array_equal(batch["W"][i], g.W)  # byte-identical weights
+        mine = {(int(u), int(v))
+                for (u, v), m in zip(batch["edges"][i],
+                                     batch["edge_mask"][i]) if m}
+        ref = {(int(u), int(v))
+               for (u, v), m in zip(g.edges, g.edge_mask) if m}
+        assert mine == ref
+        assert float(batch["area"][i]) == float(g.area)
+        # Borůvka-component connectivity == (fixed) host union-find rule
+        assert bool(batch["connected"][i]) == g.connected
+    # identical metrics whether graphs were assembled on host or device
+    from repro.core.topology import stack_graphs
+    batch.pop("connected")         # strip the extra key before scoring
+    scorer = make_scorer(rep.layout, chunk=4)
+    out = {k: np.asarray(v) for k, v in scorer(batch).items()}
+    ref_out = {k: np.asarray(v)
+               for k, v in scorer(stack_graphs(host)).items()}
+    for k in out:
+        np.testing.assert_array_equal(out[k], ref_out[k])
+
+
+def test_hetero_batched_optimizers_improve_and_return_valid_solutions():
+    cfg = ExperimentConfig(
+        arch="hetero32",
+        algorithms=("ga-batched", "sa-batched"),
+        budget=Budget(evals=16), norm_samples=6, chunk=4,
+        params={"ga-batched": {"population": 6, "elitism": 2,
+                               "tournament": 3},
+                "sa-batched": {"chains": 4}})
+    recs = run_experiment(cfg)
+    hrep = HeteroRep(HARCH)
+    for rec in recs:
+        res = rec.result
+        assert np.isfinite(res.best_cost)
+        assert res.n_evaluated >= 6
+        assert res.n_generated >= res.n_evaluated
+        order, rots = res.best_sol
+        assert order.dtype == np.int8 and order.shape == (HN,)
+        g = hrep.score_graph((order, rots))        # host-path validation
+        assert g.connected
+        assert res.history and res.history[-1][2] == res.best_cost

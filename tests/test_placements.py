@@ -102,6 +102,40 @@ def test_corner_place_no_overlap(dims):
             assert not overlap, f"rect {i} overlaps {j}"
 
 
+def test_corner_place_step4_geometric():
+    """Fig. 7 step-4 regression (hand-computed): the push direction comes
+    from where the blocking rect lies, not from an alternation heuristic.
+
+    dims = [(2,2), (2,4), (4,2)]:
+    * rect0 -> (0,0); rect1 -> (2,0) (smallest enclosing square, side 4).
+    * rect2 (4x2) from anchor (0,0): overlaps rect0, whose bottom edge is
+      at the anchor's level -> overlap to the *right* -> push up to (0,2);
+      there it overlaps rect1 (bottom edge y=0, again at/below level) ->
+      push up to (0,4), which is free.  Key (side 6, x+y 4) beats every
+      other anchor (the (2,4) anchor also reaches side 6 but x+y 6), so
+      rect2 lands at (0,4).  The old alternation seeded from the anchor
+      position moved right first and misplaced rect2 at (2,4).
+    """
+    pos = corner_place([(2.0, 2.0), (2.0, 4.0), (4.0, 2.0)])
+    assert np.array_equal(pos, np.array([[0.0, 0.0], [2.0, 0.0], [0.0, 4.0]]))
+
+
+def test_corner_place_batch_matches_scalar(hetero):
+    from repro.core.placement_hetero import corner_place_batch
+
+    rng = np.random.default_rng(7)
+    sols = [hetero.random(rng) for _ in range(6)]
+    ops = hetero.batch_ops()
+    dims = ops._dims_table[np.stack([s[0] for s in sols]).astype(np.int64),
+                           np.stack([s[1] for s in sols]).astype(np.int64)]
+    batch = corner_place_batch(dims)
+    for b, s in enumerate(sols):
+        chips = [hetero._proto[int(k)].rotated(int(r))
+                 for k, r in zip(s[0], s[1])]
+        assert np.array_equal(batch[b], corner_place([(c.w, c.h)
+                                                      for c in chips]))
+
+
 @given(st.integers(0, 10_000))
 @settings(max_examples=25, deadline=None)
 def test_hetero_random_valid(seed):

@@ -7,10 +7,11 @@ import jax.numpy as jnp
 import pytest
 from _hyp import given, settings, st
 
-from repro.core.chiplets import paper_arch
+from repro.core.chiplets import (COMPUTE, MEMORY, ArchSpec, Chiplet,
+                                 LatencyParams, paper_arch)
 from repro.core.placement_hetero import HeteroRep
 from repro.core.proxies import fw_counts_ref, layout_for, make_scorer
-from repro.core.topology import infer_links_mst
+from repro.core.topology import PlacedPhys, infer_links_mst
 
 
 def dijkstra(W, src):
@@ -93,6 +94,33 @@ def test_mst_topology_properties(rng):
             use[p] += 1
             use[q] += 1
         assert use.max() <= max(ch.n_phys() for ch in arch.chiplets) * 4
+
+
+def test_connectivity_common_component_not_largest():
+    """Constructed counterexample for the connectivity check: with
+    multi-PHY non-relay chiplets, the component with the most PHYs (4:
+    the right-hand chain of B1/B2 spare PHYs) touches only B1 and B2,
+    while a *smaller* component (3: A's PHY chained to one PHY of each B)
+    touches every chiplet.  The placement is therefore connected; judging
+    against the most-PHY component misclassified it as disconnected.
+    """
+    a = Chiplet("a", COMPUTE, 1.0, 1.0, ((0.5, 0.5),), relay=False)
+    b = Chiplet("b", MEMORY, 1.0, 1.0,
+                ((0.0, 0.0), (0.0, 0.5), (0.0, 1.0)), relay=False)
+    arch = ArchSpec("counterexample", (a, b, b), LatencyParams(),
+                    max_link_mm=3.0)
+    pos = np.array([[0, 0],                       # a0
+                    [0, 2], [100, 0], [100, 4],   # B1: x1, y1, z1
+                    [0, 4], [100, 2], [100, 6]],  # B2: x2, y2, z2
+                   dtype=np.float32)
+    owner = np.array([0, 1, 1, 1, 2, 2, 2], dtype=np.int32)
+    geo = PlacedPhys(pos=pos, owner=owner,
+                     relay=np.array([False, False, False]),
+                     kinds=np.array([0, 1, 1], dtype=np.int8), area=1.0)
+    links, connected = infer_links_mst(arch, geo)
+    # MST yields exactly the two chains: {a0, x1, x2} and {y1, y2, z1, z2}.
+    assert links == [(0, 1), (1, 4), (2, 5), (3, 5), (3, 6)]
+    assert connected
 
 
 def test_scorer_baseline_sanity(rng):
