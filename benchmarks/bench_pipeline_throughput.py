@@ -22,6 +22,16 @@ host per-child corner placement + Kruskal MST vs the batched pipeline
 (device operators, vectorized host corner placement, batched Borůvka link
 inference + ScoreGraph assembly on device).
 
+PR 4 adds the **objective ranking** section: once a candidate batch is
+scored, picking the best placements used to require pulling all nine
+metric arrays to the host and running the numpy cost formula + argsort
+per call; the objective layer compiles the cost terms into the jitted
+scorer, so cost + top-k selection happen on device
+(``Evaluator.topk`` / ``proxies.make_ranker``).  The bench isolates that
+stage (host metric conversion + ``total_cost`` + argsort vs the jitted
+cost+top-k over device-resident metrics) and also reports the fused
+end-to-end ranking call.
+
 Results go to stdout as BENCH lines and to
 ``artifacts/bench/pipeline_throughput.json``; ``benchmarks.run`` copies
 that to ``BENCH_pipeline_throughput.json`` at the repo root so the perf
@@ -36,10 +46,17 @@ import time
 import jax
 import numpy as np
 
+import functools
+
+import jax.numpy as jnp
+
 from repro.core.chiplets import homogeneous_arch, paper_arch
+from repro.core.cost import total_cost
+from repro.core.objective import compile_objective, norms_vec
 from repro.core.optimize import DevicePipeline, Evaluator
 from repro.core.placement_hetero import HeteroRep
 from repro.core.placement_homog import HomogRep
+from repro.core.topology import stack_graphs
 
 from .common import budget, emit, out_dir
 
@@ -166,6 +183,77 @@ def _hetero_prep_rates(arch_name: str, n: int) -> tuple[float, float]:
     return host, n / best
 
 
+def _ranking_rates(arch_name: str, n: int, k: int = 4
+                   ) -> tuple[float, float, float]:
+    """Cost evaluation + best-placement selection over scored batches.
+
+    * **host stage**: the pre-objective hot path, once per optimizer
+      round — numpy float64 ``total_cost`` over the scorer's metrics +
+      argsort, take k.  (On the CPU backend ``np.asarray`` of a device
+      array is zero-copy, so this isolates formula + sort.)
+    * **device stage**: what the objective layer fuses into the scorer —
+      jitted vmapped cost + ``top_k`` on the device-resident metrics.
+    * **fused e2e**: ``Evaluator.topk`` — score + cost + top-k in one
+      call (FW-bound on CPU; the stage ratio is the refactor's target).
+
+    Each measurement ranks ``inner`` independent batches so the timed
+    quantum is well above scheduler noise; best-of-5 measurements.
+    Returns (host_stage_per_s, device_stage_per_s, fused_per_s).
+    """
+    arch = paper_arch(arch_name, "baseline")
+    from repro.core.api import make_rep
+    rep = make_rep(arch, arch_name)
+    ev = Evaluator(rep, arch, rng=np.random.default_rng(0), norm_samples=8,
+                   chunk=16)
+    rng = np.random.default_rng(1)
+    _, graphs = ev.generate_valid(rep.random, rng, n)
+    batch = stack_graphs(graphs)
+    inner = 16
+    base = {k2: jnp.asarray(v)
+            for k2, v in ev.scorer(batch, ev.norm_vec).items()}
+    sets = [jax.block_until_ready({k2: v + 0 for k2, v in base.items()})
+            for _ in range(inner)]
+
+    def host_stage():
+        out = None
+        for dm in sets:
+            m = {k2: np.asarray(v) for k2, v in dm.items() if k2 != "cost"}
+            costs = np.asarray(total_cost(m, arch, ev.norm))
+            out = np.argsort(costs)[:k]
+        return out
+
+    cobj = compile_objective(ev.objective)
+    row = jnp.asarray(norms_vec(ev.norm))
+
+    @functools.partial(jax.jit, static_argnames=("kk",))
+    def dev_one(m, kk):
+        # Default-objective terms are metrics-only; no graph arrays needed.
+        sample = {k2: v for k2, v in m.items() if k2 != "cost"}
+        costs = jax.vmap(lambda s: cobj.cost_one(s, row))(sample)
+        return jax.lax.top_k(-costs, kk)[1]
+
+    def dev_stage():
+        outs = [dev_one(dm, k) for dm in sets]
+        jax.block_until_ready(outs)
+        return np.asarray(outs[-1])
+
+    def best_of(fn, reps=5, warm=2):
+        for _ in range(warm):
+            fn()
+        best = np.inf
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            fn()
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    total = n * inner
+    host_best = best_of(host_stage)
+    dev_best = best_of(dev_stage)
+    fused_best = best_of(lambda: ev.topk(batch, k=k), reps=3, warm=1)
+    return total / host_best, total / dev_best, n / fused_best
+
+
 def run(quick: bool = True) -> dict:
     n = budget(quick, 48, 256)
     e2e_n = budget(quick, 16, 64)
@@ -205,6 +293,23 @@ def run(quick: bool = True) -> dict:
          "fused batched ops + vectorized corner place + Boruvka on device")
     emit("pipeline_hetero32_prep_speedup", round(hd / hh, 1),
          f"{hd / hh:.1f}x batched over host loop (target >= 3x)")
+    # objective ranking (PR 4): cost evaluation + best-placement selection
+    # over a scored candidate batch — host numpy formula + argsort vs the
+    # in-scorer compiled objective + device top-k
+    rn = budget(quick, 512, 2048)
+    rh, rd, rf = _ranking_rates("homog32", rn)
+    results["objective_ranking"] = dict(
+        n_rank=rn, host_stage_per_s=rh, device_stage_per_s=rd,
+        fused_e2e_per_s=rf, stage_speedup=rd / rh)
+    emit("objective_ranking_host_stage_per_s", round(rh, 1),
+         "metrics->host + numpy total_cost + argsort, per scored batch")
+    emit("objective_ranking_device_stage_per_s", round(rd, 1),
+         "jitted vmapped objective cost + top_k on device metrics")
+    emit("objective_ranking_fused_e2e_per_s", round(rf, 1),
+         "Evaluator.topk: score+cost+top-k one call (FW-bound on CPU)")
+    emit("objective_ranking_stage_speedup", round(rd / rh, 1),
+         f"{rd / rh:.1f}x device cost+top-k over host formula+argsort "
+         "(target >= 2x)")
     # headline: the acceptance metric — GA-generation production on 8x8
     emit("pipeline_8x8_ga_generation_speedup",
          round(results["8x8"]["prep_speedup"], 1),

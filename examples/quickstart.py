@@ -6,10 +6,15 @@ experiment API.
 
 The whole experiment is one serializable config: swap ``"ga"`` for ``"sa"``
 or ``"br"``, change ``backend`` to ``"fw-pallas"`` to use the Pallas
-min-plus kernel, or dump ``cfg.to_json()`` into a sweep file.
+min-plus kernel, or dump ``cfg.to_json()`` into a sweep file.  The cost
+function is an explicit ``Objective`` (paper §IV-B traffic mix + area):
+change the ``TrafficMix`` weights, derive them from a trace
+(``TrafficMix.from_trace_mix``), or append penalty terms such as
+``TermSpec("link-length-cap", params={"cap_mm": 2.0})``.
 """
 from repro.core.api import (Budget, ExperimentConfig, GAParams,
                             baseline_cost, run_experiment)
+from repro.core.objective import Objective, TrafficMix
 
 
 def ascii_placement(types) -> str:
@@ -25,6 +30,11 @@ def main():
         budget=Budget(evals=240),
         norm_samples=32,
         params={"ga": GAParams(population=24, elitism=5, tournament=5)},
+        # The paper's §IV-B cost function, spelled out: C2M/M2I traffic and
+        # area weighted 2.0, C2C/C2I 0.1.  This is also the default.
+        objective=Objective(mix=TrafficMix(lat=(0.1, 2.0, 0.1, 2.0),
+                                           thr=(0.1, 2.0, 0.1, 2.0)),
+                            w_area=2.0),
     )
     print("== PlaceIT quickstart: homog32, GA, small budget ==")
     print(f"config: {cfg.to_json()}\n")

@@ -6,5 +6,8 @@
 from .api import (Budget, ExperimentConfig, RunRecord, SweepResult,  # noqa: F401
                   baseline_cost, best_by_algorithm, run_experiment,
                   run_sweep, summarize)
-from .registries import (OPTIMIZERS, SCORER_BACKENDS,  # noqa: F401
+from .objective import (Objective, TermSpec, TrafficMix,  # noqa: F401
+                        compile_objective, objective_cost_host)
+from .registries import (OBJECTIVE_TERMS, OPTIMIZERS,  # noqa: F401
+                         SCORER_BACKENDS, register_objective_term,
                          register_optimizer, register_scorer_backend)

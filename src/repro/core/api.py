@@ -21,9 +21,14 @@ declarative, serializable API:
   registries.
 * :func:`run_sweep` — many configs at once, sharing one ``Evaluator``
   (normalizers) per (arch, seed) and one *jitted scorer* per (layout,
-  chunk, backend) across the whole sweep, and folding SA repetitions into
-  extra chains of a single batched call.  This is the fast path: no
-  recompilation between repetitions or configs.
+  chunk, backend, objective) across the whole sweep, and folding SA
+  repetitions into extra chains of a single batched call.  This is the
+  fast path: no recompilation between repetitions or configs.
+* ``objective:`` — a typed, serializable cost function
+  (:class:`repro.core.objective.Objective`): traffic-mix weights,
+  normalizer policy, registry-driven extra terms.  The compiled objective
+  is lowered into the jitted scorer, so per-placement cost and top-k
+  selection run on device (``Evaluator.topk``).
 
 Per-algorithm RNG streams are derived with :func:`algo_seed` from a stable
 CRC32 digest of the algorithm name — unlike Python's ``hash()``, this does
@@ -42,12 +47,16 @@ import numpy as np
 
 from .baseline import MeshBaseline
 from .chiplets import ArchSpec, paper_arch
-from .cost import total_cost
+from .objective import Objective, TrafficMix
 from .optimize import (Evaluator, OptResult, best_random,
-                       best_random_batched, best_random_steps, drive_stacked,
-                       genetic_algorithm, genetic_algorithm_batched,
+                       best_random_batched, best_random_batched_steps,
+                       best_random_steps, drive_stacked, genetic_algorithm,
+                       genetic_algorithm_batched,
+                       genetic_algorithm_batched_steps,
                        genetic_algorithm_steps, simulated_annealing,
-                       simulated_annealing_batched)
+                       simulated_annealing_batched,
+                       simulated_annealing_batched_steps,
+                       simulated_annealing_steps)
 from .placement_hetero import HeteroRep
 from .placement_homog import HomogRep
 from .proxies import fw_counts_ref, make_scorer
@@ -166,15 +175,18 @@ def _run_ga(evaluator: Evaluator, rng: np.random.Generator, budget: Budget,
     return genetic_algorithm(evaluator, rng, **_ga_kwargs(budget, params))
 
 
+def _sa_kwargs(budget: Budget, params: SAParams) -> dict:
+    max_it = (None if budget.evals is None
+              else max(1, budget.evals // params.chains))
+    return dict(t0_temp=params.t0_temp, block_len=params.block_len,
+                alpha=params.alpha, beta=params.beta, chains=params.chains,
+                time_budget_s=budget.seconds, max_iters=max_it)
+
+
 @register_optimizer("sa", params_cls=SAParams)
 def _run_sa(evaluator: Evaluator, rng: np.random.Generator, budget: Budget,
             params: SAParams) -> OptResult:
-    max_it = (None if budget.evals is None
-              else max(1, budget.evals // params.chains))
-    return simulated_annealing(
-        evaluator, rng, t0_temp=params.t0_temp, block_len=params.block_len,
-        alpha=params.alpha, beta=params.beta, chains=params.chains,
-        time_budget_s=budget.seconds, max_iters=max_it)
+    return simulated_annealing(evaluator, rng, **_sa_kwargs(budget, params))
 
 
 # Device-resident variants (homogeneous grids only): whole generations /
@@ -191,30 +203,30 @@ def _run_br_batched(evaluator: Evaluator, rng: np.random.Generator,
                                batch=params.batch)
 
 
-@register_optimizer("ga-batched", params_cls=GAParams)
-def _run_ga_batched(evaluator: Evaluator, rng: np.random.Generator,
-                    budget: Budget, params: GAParams) -> OptResult:
+def _ga_batched_kwargs(budget: Budget, params: GAParams) -> dict:
     # ga-batched scores elites once (population up front, then only the
     # population - elitism children per generation), so the evals->
     # generations conversion differs from the host GA's evals//population.
     per_gen = max(params.population - params.elitism, 1)
     max_gen = (None if budget.evals is None
                else max(1, (budget.evals - params.population) // per_gen))
-    return genetic_algorithm_batched(
-        evaluator, rng, population=params.population, elitism=params.elitism,
-        tournament=params.tournament, p_mutation=params.p_mutation,
-        time_budget_s=budget.seconds, max_generations=max_gen)
+    return dict(population=params.population, elitism=params.elitism,
+                tournament=params.tournament, p_mutation=params.p_mutation,
+                time_budget_s=budget.seconds, max_generations=max_gen)
+
+
+@register_optimizer("ga-batched", params_cls=GAParams)
+def _run_ga_batched(evaluator: Evaluator, rng: np.random.Generator,
+                    budget: Budget, params: GAParams) -> OptResult:
+    return genetic_algorithm_batched(evaluator, rng,
+                                     **_ga_batched_kwargs(budget, params))
 
 
 @register_optimizer("sa-batched", params_cls=SAParams)
 def _run_sa_batched(evaluator: Evaluator, rng: np.random.Generator,
                     budget: Budget, params: SAParams) -> OptResult:
-    max_it = (None if budget.evals is None
-              else max(1, budget.evals // params.chains))
-    return simulated_annealing_batched(
-        evaluator, rng, t0_temp=params.t0_temp, block_len=params.block_len,
-        alpha=params.alpha, beta=params.beta, chains=params.chains,
-        time_budget_s=budget.seconds, max_iters=max_it)
+    return simulated_annealing_batched(evaluator, rng,
+                                       **_sa_kwargs(budget, params))
 
 
 # ---------------------------------------------------------------------------
@@ -297,23 +309,29 @@ def make_rep(arch: ArchSpec, arch_name: str,
 
 
 # ---------------------------------------------------------------------------
-# Jitted-scorer cache: one compilation per (layout, chunk, backend).
+# Jitted-scorer cache: one compilation per (layout, chunk, backend,
+# objective).
 # ---------------------------------------------------------------------------
 
 _SCORER_CACHE: dict[tuple, Callable] = {}
 _SCORER_STATS = {"hits": 0, "misses": 0}
 
 
-def get_scorer(layout, *, chunk: int, backend: str) -> Callable:
-    """Cached jitted batched scorer.  Two Evaluators over the same layout
-    (e.g. sweep repetitions, or configs differing only in budget/seed)
-    share one compiled function instead of re-tracing."""
-    key = (layout, chunk, backend)
+def get_scorer(layout, *, chunk: int, backend: str,
+               objective: Objective | None = None) -> Callable:
+    """Cached jitted batched scorer (with the compiled objective lowered
+    in).  Two Evaluators over the same layout (e.g. sweep repetitions, or
+    configs differing only in budget/seed) share one compiled function
+    instead of re-tracing; normalizers are a runtime argument, so
+    different normalizer draws share too."""
+    objective = objective if objective is not None else Objective()
+    key = (layout, chunk, backend, objective)
     hit = key in _SCORER_CACHE
     _SCORER_STATS["hits" if hit else "misses"] += 1
     if not hit:
         _SCORER_CACHE[key] = make_scorer(
-            layout, chunk=chunk, fw_impl=resolve_backend(backend))
+            layout, chunk=chunk, fw_impl=resolve_backend(backend),
+            objective=objective)
     return _SCORER_CACHE[key]
 
 
@@ -335,15 +353,21 @@ def clear_pipeline_cache() -> None:
 
 def make_evaluator(rep, arch: ArchSpec, *, rng: np.random.Generator,
                    norm_samples: int, chunk: int = 16,
-                   backend: str = "fw-ref", fw_impl=None) -> Evaluator:
+                   backend: str = "fw-ref", fw_impl=None,
+                   objective: Objective | None = None) -> Evaluator:
     """Evaluator wired to a named backend; raw ``fw_impl`` callables (the
-    legacy hook) bypass the cache."""
+    legacy hook) bypass the cache.  ``objective`` defaults to the default
+    ``Objective`` built from the arch's (deprecated) ``w_*`` weights —
+    i.e. the paper formula for paper archs."""
+    objective = (objective if objective is not None
+                 else Objective.from_arch(arch))
     if fw_impl is not None:
         return Evaluator(rep, arch, rng=rng, norm_samples=norm_samples,
-                         chunk=chunk, fw_impl=fw_impl)
-    scorer = get_scorer(rep.layout, chunk=chunk, backend=backend)
+                         chunk=chunk, fw_impl=fw_impl, objective=objective)
+    scorer = get_scorer(rep.layout, chunk=chunk, backend=backend,
+                        objective=objective)
     return Evaluator(rep, arch, rng=rng, norm_samples=norm_samples,
-                     chunk=chunk, scorer=scorer)
+                     chunk=chunk, scorer=scorer, objective=objective)
 
 
 # ---------------------------------------------------------------------------
@@ -370,9 +394,15 @@ class ExperimentConfig:
     chunk: int = 16
     mutation_mode: str | None = None       # None -> paper default
     params: dict = field(default_factory=dict)
+    # Cost function (repro.core.objective); the default reproduces the
+    # paper formula bit-for-bit, so old serialized configs load unchanged.
+    objective: Objective = field(default_factory=Objective)
 
     def __post_init__(self):
         object.__setattr__(self, "algorithms", tuple(self.algorithms))
+        if not isinstance(self.objective, Objective):
+            object.__setattr__(self, "objective",
+                              Objective.from_dict(self.objective))
         # Normalize overrides to typed params (validates algo names too).
         norm = {}
         for algo, ov in self.params.items():
@@ -415,6 +445,7 @@ class ExperimentConfig:
             "mutation_mode": self.mutation_mode,
             "params": {a: dataclasses.asdict(p)
                        for a, p in self.params.items()},
+            "objective": self.objective.to_dict(),
         }
 
     @classmethod
@@ -461,6 +492,10 @@ class RunRecord:
     repetition: int
     result: OptResult
     seconds: float
+    # Traffic types whose cost normalizer fell back to 1.0 because every
+    # norm sample was disconnected (see cost.CostNormalizers.degenerate);
+    # non-empty means the run's costs are partially unnormalized.
+    degenerate_norms: tuple = ()
 
 
 def run_experiment(config: ExperimentConfig, *, fw_impl=None
@@ -484,7 +519,7 @@ def run_experiment(config: ExperimentConfig, *, fw_impl=None
         ev = make_evaluator(rep, arch, rng=rng,
                             norm_samples=config.norm_samples,
                             chunk=config.chunk, backend=config.backend,
-                            fw_impl=fw_impl)
+                            fw_impl=fw_impl, objective=config.objective)
         for entry in entries:
             t0 = time.monotonic()
             rng_a = np.random.default_rng(
@@ -492,7 +527,8 @@ def run_experiment(config: ExperimentConfig, *, fw_impl=None
             res = entry.fn(ev, rng_a, config.budget,
                            config.resolved_params(entry.name))
             records.append(RunRecord(config.arch, config.config, entry.name,
-                                     rep_i, res, time.monotonic() - t0))
+                                     rep_i, res, time.monotonic() - t0,
+                                     degenerate_norms=ev.degenerate_norms))
     return records
 
 
@@ -505,10 +541,10 @@ def baseline_cost(config: ExperimentConfig, *, fw_impl=None
     ev = make_evaluator(rep, arch, rng=rng,
                         norm_samples=config.norm_samples,
                         chunk=config.chunk, backend=config.backend,
-                        fw_impl=fw_impl)
+                        fw_impl=fw_impl, objective=config.objective)
     g = MeshBaseline(arch).build()[0]
     metrics = ev.score([g])
-    cost = float(np.asarray(total_cost(metrics, arch, ev.norm))[0])
+    cost = float(np.asarray(ev.costs_from(metrics))[0])
     return cost, {k: float(v[0]) for k, v in metrics.items()}
 
 
@@ -554,7 +590,32 @@ def _ga_steps(ev, rng, budget: Budget, params: GAParams):
     return genetic_algorithm_steps(ev, rng, **_ga_kwargs(budget, params))
 
 
-_SWEEP_STACKABLE = {"br": _br_steps, "ga": _ga_steps}
+def _sa_steps(ev, rng, budget: Budget, params: SAParams):
+    return simulated_annealing_steps(ev, rng, **_sa_kwargs(budget, params))
+
+
+def _br_batched_steps(ev, rng, budget: Budget, params: BRParams):
+    return best_random_batched_steps(ev, rng, **_br_kwargs(budget, params))
+
+
+def _ga_batched_steps(ev, rng, budget: Budget, params: GAParams):
+    return genetic_algorithm_batched_steps(
+        ev, rng, **_ga_batched_kwargs(budget, params))
+
+
+def _sa_batched_steps(ev, rng, budget: Budget, params: SAParams):
+    return simulated_annealing_batched_steps(
+        ev, rng, **_sa_kwargs(budget, params))
+
+
+# Every optimizer is a step generator now, so the whole family stacks —
+# including SA (host chains) and the device-resident *-batched drivers
+# (their requests are pre-stacked device batches).  ROADMAP item closed.
+_SWEEP_STACKABLE = {
+    "br": _br_steps, "ga": _ga_steps, "sa": _sa_steps,
+    "br-batched": _br_batched_steps, "ga-batched": _ga_batched_steps,
+    "sa-batched": _sa_batched_steps,
+}
 
 
 @dataclass
@@ -589,11 +650,14 @@ def run_sweep(configs, *, fold_repetitions: bool = True,
     run, so folding it would shrink per-repetition effort by ~k, and such
     configs run repetition-by-repetition instead.
 
-    With ``stack_scoring`` (default), BR/GA runs from configs that share a
-    jitted scorer (same layout, chunk and backend — e.g. GA populations
-    from configs differing only in seed or hyper-parameters) execute in
-    lockstep with their per-round scoring requests concatenated into a
-    single vmapped call (:func:`repro.core.optimize.drive_stacked`).
+    With ``stack_scoring`` (default), runs of *any* registered-stackable
+    optimizer — BR/GA/SA host loops and the device-resident ``*-batched``
+    drivers — from configs that share a jitted scorer (same layout, chunk,
+    backend and objective — e.g. GA populations from configs differing
+    only in seed or hyper-parameters) execute in lockstep with their
+    per-round scoring requests concatenated into a single vmapped call
+    (:func:`repro.core.optimize.drive_stacked`); per-row normalizer
+    vectors keep each run's in-scorer costs exact.
     Results are bit-for-bit identical to unstacked execution; only the
     number of device dispatches changes (``stats.score_calls``).  Runs
     with a wall-clock budget are excluded (interleaving would consume
@@ -614,13 +678,14 @@ def run_sweep(configs, *, fold_repetitions: bool = True,
     for cfg_i, cfg in enumerate(configs):
         arch = paper_arch(cfg.arch, cfg.config)
         key = (cfg.arch, cfg.config, cfg.seed, cfg.norm_samples, cfg.chunk,
-               cfg.backend, cfg.mutation_mode)
+               cfg.backend, cfg.mutation_mode, cfg.objective)
         if key not in ev_cache:
             rng = np.random.default_rng(cfg.seed)
             rep = make_rep(arch, cfg.arch, cfg.mutation_mode)
             ev_cache[key] = make_evaluator(
                 rep, arch, rng=rng, norm_samples=cfg.norm_samples,
-                chunk=cfg.chunk, backend=cfg.backend)
+                chunk=cfg.chunk, backend=cfg.backend,
+                objective=cfg.objective)
         ev = ev_cache[key]
         for algo in cfg.algorithms:
             entry = OPTIMIZERS.get(algo)
@@ -676,7 +741,7 @@ def run_sweep(configs, *, fold_repetitions: bool = True,
     for u in units:          # units were built in config order
         runs[u.cfg_i].records.append(
             RunRecord(u.cfg.arch, u.cfg.config, u.algo, u.rep_i, u.result,
-                      u.seconds))
+                      u.seconds, degenerate_norms=u.ev.degenerate_norms))
     stats = SweepStats(
         scorers_built=_SCORER_STATS["misses"] - miss0,
         evaluators_built=len(ev_cache),

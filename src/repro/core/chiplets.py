@@ -123,9 +123,19 @@ class ArchSpec:
     max_link_mm: float = 3.0
     distance: str = "euclidean"          # or "manhattan"
     # Cost-function weights (paper §V-B): area & C2M/M2I get 2, C2C/C2I 0.1.
+    # DEPRECATED alias: these fields only seed the *default* objective
+    # (objective.Objective.from_arch / default_objective()); prefer an
+    # explicit ``Objective`` (ExperimentConfig.objective or
+    # Evaluator(objective=...)) for custom mixes and extra cost terms.
     w_lat: tuple[float, float, float, float] = (0.1, 2.0, 0.1, 2.0)
     w_thr: tuple[float, float, float, float] = (0.1, 2.0, 0.1, 2.0)
     w_area: float = 2.0
+
+    def default_objective(self):
+        """The deprecated ``w_*`` weight fields as a typed
+        :class:`repro.core.objective.Objective` (the migration bridge)."""
+        from .objective import Objective
+        return Objective.from_arch(self)
 
     def counts(self) -> tuple[int, int, int]:
         c = sum(1 for x in self.chiplets if x.kind == COMPUTE)

@@ -1,0 +1,435 @@
+"""Typed, registry-driven placement objectives (paper §IV-B, pluggable).
+
+The paper's cost function is a *user-defined* mix of four traffic types
+plus area.  This module makes that mix — and the whole cost formula — a
+first-class, serializable configuration instead of weights hard-wired into
+``ArchSpec``:
+
+* :class:`TrafficMix` — typed per-traffic-type latency/throughput weights
+  (paper §V-B values by default), including a closed-form derivation from
+  a :class:`repro.core.traces.TraceMix` (weight the classes the way a
+  dependency-driven trace actually loads them).
+* :class:`TermSpec` / :class:`Objective` — a cost function as a weighted
+  sum of named *terms* from the ``@register_objective_term`` registry
+  (``repro.core.registries.OBJECTIVE_TERMS``).  The default
+  ``(lat, inv-thr, area)`` triple reproduces the paper formula bit-for-bit
+  on the host float64 path; extra terms (``link-length-cap``,
+  ``node-degree``) turn physical constraints into soft penalties.
+* :func:`compile_objective` — lowers the selected terms into a
+  per-placement ``jnp`` cost function that ``proxies.make_scorer`` fuses
+  into the jitted scorer, so per-placement cost (and argmin / top-k
+  selection, see ``proxies.make_ranker``) happens on device.  Normalizers
+  enter as a *runtime vector* (:func:`norms_vec`), not trace-time
+  constants, so evaluators with different normalizer draws share one
+  compiled scorer.
+* :func:`objective_cost_host` — the float64 host evaluation used for
+  reporting and equivalence tests; ``cost.total_cost`` delegates here.
+
+Term implementations see a per-placement ``sample`` dict: the nine metric
+scalars (``lat_*`` / ``thr_*`` / ``area``) plus the graph arrays
+(``edges`` [E,2], ``edge_mask`` [E], ``edge_len`` [E] in mm) and the
+static PHY count ``Vp``.  ``norms`` is a dict of the nine normalizer
+scalars (``lat_*`` / ``inv_thr_*`` / ``area``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from dataclasses import dataclass, field
+from typing import Mapping
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .chiplets import TRAFFIC_TYPES, ArchSpec
+from .registries import (OBJECTIVE_TERMS, ObjectiveTermEntry,
+                         register_objective_term)
+
+_EPS = 1.0e-6
+
+# Normalizer vector layout (stable; the jitted scorer takes this as a
+# runtime argument so normalizer draws never retrace):
+NORM_SLOTS = tuple([f"lat_{t}" for t in TRAFFIC_TYPES]
+                   + [f"inv_thr_{t}" for t in TRAFFIC_TYPES] + ["area"])
+NORM_DIM = len(NORM_SLOTS)
+
+NORMALIZER_POLICIES = ("mean", "median", "ones")
+
+
+def norms_vec(norm) -> np.ndarray:
+    """``cost.CostNormalizers`` -> flat float32 vector in NORM_SLOTS order."""
+    out = np.empty(NORM_DIM, np.float32)
+    for i, t in enumerate(TRAFFIC_TYPES):
+        out[i] = norm.lat[t]
+        out[4 + i] = norm.inv_thr[t]
+    out[8] = norm.area
+    return out
+
+
+def _norms_dict_from_row(row):
+    d = {}
+    for i, t in enumerate(TRAFFIC_TYPES):
+        d[f"lat_{t}"] = row[i]
+        d[f"inv_thr_{t}"] = row[4 + i]
+    d["area"] = row[8]
+    return d
+
+
+# ---------------------------------------------------------------------------
+# TrafficMix: typed per-type weights.
+# ---------------------------------------------------------------------------
+
+_PAPER_W = (0.1, 2.0, 0.1, 2.0)     # §V-B: C2M / M2I weighted 2, C2C / C2I 0.1
+
+
+@dataclass(frozen=True)
+class TrafficMix:
+    """Latency/throughput weights per traffic type (order TRAFFIC_TYPES)."""
+
+    lat: tuple = _PAPER_W
+    thr: tuple = _PAPER_W
+
+    def __post_init__(self):
+        for name in ("lat", "thr"):
+            v = tuple(float(x) for x in getattr(self, name))
+            if len(v) != len(TRAFFIC_TYPES):
+                raise ValueError(
+                    f"TrafficMix.{name} needs {len(TRAFFIC_TYPES)} weights "
+                    f"(order {TRAFFIC_TYPES}), got {len(v)}")
+            if not all(np.isfinite(x) and x >= 0.0 for x in v):
+                raise ValueError(f"TrafficMix.{name} weights must be finite "
+                                 f"and non-negative: {v}")
+            object.__setattr__(self, name, v)
+
+    @classmethod
+    def paper(cls) -> "TrafficMix":
+        return cls()
+
+    @classmethod
+    def from_trace_mix(cls, mix, *, flit_weighted: bool = True,
+                       scale: float = 4.2) -> "TrafficMix":
+        """Weights proportional to the traffic a §VII-A dependency trace
+        actually generates (``traces.TraceMix.class_shares``; directions
+        folded into the four chiplet-pair classes).  ``scale`` sets the
+        overall traffic-vs-area balance — the default makes the weights
+        sum to the paper mix's 4.2, so ``w_area`` keeps its meaning."""
+        shares = mix.class_shares(flit_weighted=flit_weighted)
+        w = tuple(scale * shares[t] for t in TRAFFIC_TYPES)
+        return cls(lat=w, thr=w)
+
+    def to_dict(self) -> dict:
+        return {"lat": list(self.lat), "thr": list(self.thr)}
+
+    @classmethod
+    def from_dict(cls, d: Mapping) -> "TrafficMix":
+        unknown = set(d) - {"lat", "thr"}
+        if unknown:
+            raise ValueError(f"unknown TrafficMix keys: {sorted(unknown)}")
+        return cls(**{k: tuple(v) for k, v in d.items()})
+
+
+# ---------------------------------------------------------------------------
+# TermSpec + Objective.
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class TermSpec:
+    """One weighted term: a registry name plus hashable keyword params.
+
+    Param values may be numbers, strings or bools (anything JSON-scalar
+    and hashable); numbers are normalized to float so serialization
+    round-trips compare equal.
+    """
+
+    name: str
+    weight: float = 1.0
+    params: tuple = ()              # sorted ((key, value), ...) pairs
+
+    @staticmethod
+    def _coerce(v):
+        if isinstance(v, bool) or isinstance(v, str):
+            return v
+        if isinstance(v, (int, float)):
+            return float(v)
+        raise TypeError(f"TermSpec param values must be JSON scalars "
+                        f"(number/str/bool), got {type(v).__name__}: {v!r}")
+
+    def __post_init__(self):
+        p = self.params
+        items = p.items() if isinstance(p, Mapping) else p
+        p = tuple(sorted((str(k), self._coerce(v)) for k, v in items))
+        object.__setattr__(self, "params", p)
+        object.__setattr__(self, "weight", float(self.weight))
+
+    def param_dict(self) -> dict:
+        return dict(self.params)
+
+    def to_dict(self) -> dict:
+        return {"name": self.name, "weight": self.weight,
+                "params": dict(self.params)}
+
+    @classmethod
+    def from_dict(cls, d) -> "TermSpec":
+        if isinstance(d, TermSpec):
+            return d
+        if isinstance(d, str):
+            return cls(name=d)
+        unknown = set(d) - {"name", "weight", "params"}
+        if unknown:
+            raise ValueError(f"unknown TermSpec keys: {sorted(unknown)}")
+        return cls(**dict(d))
+
+
+DEFAULT_TERMS = (TermSpec("lat"), TermSpec("inv-thr"), TermSpec("area"))
+
+
+@dataclass(frozen=True)
+class Objective:
+    """A placement cost function: traffic mix x normalizer policy x terms.
+
+    The default value reproduces the paper's §IV-B formula (and the
+    deprecated ``ArchSpec.w_lat/w_thr/w_area`` weights) bit-for-bit on the
+    host float64 path.  Hashable — it keys the jitted-scorer cache and the
+    sweep's stacked-scoring groups.
+    """
+
+    mix: TrafficMix = field(default_factory=TrafficMix)
+    w_area: float = 2.0
+    normalizer: str = "mean"        # mean | median | ones
+    terms: tuple = DEFAULT_TERMS
+
+    def __post_init__(self):
+        if isinstance(self.mix, Mapping):
+            object.__setattr__(self, "mix", TrafficMix.from_dict(self.mix))
+        object.__setattr__(self, "w_area", float(self.w_area))
+        object.__setattr__(
+            self, "terms",
+            tuple(TermSpec.from_dict(t) for t in self.terms))
+        if self.normalizer not in NORMALIZER_POLICIES:
+            raise ValueError(
+                f"unknown normalizer policy {self.normalizer!r}; one of "
+                f"{NORMALIZER_POLICIES}")
+
+    @classmethod
+    def from_arch(cls, arch: ArchSpec, **kw) -> "Objective":
+        """Bridge for the deprecated ``ArchSpec.w_*`` weight fields."""
+        return cls(mix=TrafficMix(lat=arch.w_lat, thr=arch.w_thr),
+                   w_area=arch.w_area, **kw)
+
+    def with_terms(self, *extra: TermSpec) -> "Objective":
+        return dataclasses.replace(self, terms=self.terms + tuple(extra))
+
+    # -- serialization ----------------------------------------------------
+    def to_dict(self) -> dict:
+        return {"mix": self.mix.to_dict(), "w_area": self.w_area,
+                "normalizer": self.normalizer,
+                "terms": [t.to_dict() for t in self.terms]}
+
+    @classmethod
+    def from_dict(cls, d: Mapping) -> "Objective":
+        unknown = set(d) - {f.name for f in dataclasses.fields(cls)}
+        if unknown:
+            raise ValueError(f"unknown Objective keys: {sorted(unknown)}")
+        return cls(**dict(d))
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_dict(), indent=1)
+
+    @classmethod
+    def from_json(cls, s: str) -> "Objective":
+        return cls.from_dict(json.loads(s))
+
+
+# ---------------------------------------------------------------------------
+# Built-in terms.  Device fns are per-placement jnp (traced inside the
+# scorer's vmap); host fns are batched float64 numpy whose accumulation
+# order matches the legacy ``cost.cost_components`` formula exactly.
+# ---------------------------------------------------------------------------
+
+def _lat_host(metrics, batch, norms, obj, params):
+    acc = None
+    for i, t in enumerate(TRAFFIC_TYPES):
+        v = (obj.mix.lat[i] * np.asarray(metrics[f"lat_{t}"], np.float64)
+             / max(norms[f"lat_{t}"], _EPS))
+        acc = v if acc is None else acc + v
+    return acc
+
+
+@register_objective_term("lat", host_fn=_lat_host)
+def _lat(sample, norms, obj, params):
+    """Normalized mean shortest-path latency, weighted per traffic type."""
+    acc = 0.0
+    for i, t in enumerate(TRAFFIC_TYPES):
+        acc = acc + (obj.mix.lat[i] * sample[f"lat_{t}"]
+                     / jnp.maximum(norms[f"lat_{t}"], _EPS))
+    return acc
+
+
+def _inv_thr_host(metrics, batch, norms, obj, params):
+    acc = None
+    for i, t in enumerate(TRAFFIC_TYPES):
+        v = (obj.mix.thr[i]
+             * (1.0 / np.maximum(np.asarray(metrics[f"thr_{t}"],
+                                            np.float64), _EPS))
+             / max(norms[f"inv_thr_{t}"], _EPS))
+        acc = v if acc is None else acc + v
+    return acc
+
+
+@register_objective_term("inv-thr", host_fn=_inv_thr_host)
+def _inv_thr(sample, norms, obj, params):
+    """Normalized inverse saturation throughput ("lower is better")."""
+    acc = 0.0
+    for i, t in enumerate(TRAFFIC_TYPES):
+        acc = acc + (obj.mix.thr[i]
+                     / jnp.maximum(sample[f"thr_{t}"], _EPS)
+                     / jnp.maximum(norms[f"inv_thr_{t}"], _EPS))
+    return acc
+
+
+def _area_host(metrics, batch, norms, obj, params):
+    return (obj.w_area * np.asarray(metrics["area"], np.float64)
+            / max(norms["area"], _EPS))
+
+
+@register_objective_term("area", host_fn=_area_host)
+def _area(sample, norms, obj, params):
+    """Normalized enclosing-rectangle area (§V-A get_area)."""
+    return obj.w_area * sample["area"] / jnp.maximum(norms["area"], _EPS)
+
+
+def _link_len_host(metrics, batch, norms, obj, params):
+    cap = params.get("cap_mm", 3.0)
+    over = np.maximum(np.asarray(batch["edge_len"], np.float64) - cap, 0.0)
+    return 0.5 * np.where(np.asarray(batch["edge_mask"]), over, 0.0).sum(-1)
+
+
+@register_objective_term("link-length-cap", host_fn=_link_len_host)
+def _link_len(sample, norms, obj, params):
+    """Soft D2D link-length budget: total mm of link length above
+    ``cap_mm`` over the placement's (undirected) links.  Zero whenever all
+    links respect the cap — tighten ``cap_mm`` below ``max_link_mm`` to
+    bias the search toward shorter (lower-energy) interposer routes."""
+    cap = params.get("cap_mm", 3.0)
+    over = jnp.maximum(sample["edge_len"] - cap, 0.0)
+    return 0.5 * jnp.where(sample["edge_mask"], over, 0.0).sum()
+
+
+def _node_degree_host(metrics, batch, norms, obj, params):
+    cap = params.get("max_degree", 4.0)
+    E = np.asarray(batch["edges"])
+    M = np.asarray(batch["edge_mask"])
+    out = np.zeros(E.shape[0], np.float64)
+    for b in range(E.shape[0]):
+        deg = np.bincount(E[b, M[b], 0])
+        out[b] = np.maximum(deg - cap, 0.0).sum()
+    return out
+
+
+@register_objective_term("node-degree", host_fn=_node_degree_host)
+def _node_degree(sample, norms, obj, params):
+    """Per-PHY link-count penalty: sum of degree overage above
+    ``max_degree`` (a router-radix proxy).  Out-degree over the directed
+    edge list equals the undirected PHY degree."""
+    cap = params.get("max_degree", 4.0)
+    deg = jnp.zeros(sample["Vp"], jnp.float32).at[
+        sample["edges"][:, 0]].add(
+        jnp.where(sample["edge_mask"], 1.0, 0.0))
+    return jnp.maximum(deg - cap, 0.0).sum()
+
+
+# ---------------------------------------------------------------------------
+# Compilation: Objective -> per-placement device cost function.
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class CompiledObjective:
+    """An :class:`Objective` resolved against the term registry.
+
+    ``cost_one(sample, norms_row)`` is the per-placement jnp cost — pure,
+    vmappable, with the normalizer vector as a runtime argument so one
+    compiled scorer serves every normalizer draw (and, stacked, per-row
+    norms from different runs in one call).
+    """
+
+    objective: Objective
+    entries: tuple
+
+    def cost_one(self, sample, norms_row):
+        norms = _norms_dict_from_row(norms_row)
+        total = jnp.float32(0.0)
+        for spec, entry in zip(self.objective.terms, self.entries):
+            total = total + spec.weight * entry.fn(
+                sample, norms, self.objective, spec.param_dict())
+        return total
+
+
+def compile_objective(objective: Objective, layout=None) -> CompiledObjective:
+    """Resolve ``objective.terms`` against OBJECTIVE_TERMS (fails fast on
+    unknown names) into a :class:`CompiledObjective`."""
+    entries = tuple(OBJECTIVE_TERMS.get(s.name) for s in objective.terms)
+    return CompiledObjective(objective, entries)
+
+
+# ---------------------------------------------------------------------------
+# Host evaluation (reporting, legacy total_cost, device-agreement tests).
+# ---------------------------------------------------------------------------
+
+def _host_norms(norm) -> dict:
+    d = {}
+    for t in TRAFFIC_TYPES:
+        d[f"lat_{t}"] = norm.lat[t]
+        d[f"inv_thr_{t}"] = norm.inv_thr[t]
+    d["area"] = norm.area
+    return d
+
+
+def _host_fallback(entry: ObjectiveTermEntry, objective, spec, metrics,
+                   batch, norm, vp: int | None) -> np.ndarray:
+    """vmap the device term over host arrays (float32) when no dedicated
+    host implementation exists."""
+    sample = {k: jnp.asarray(np.asarray(v))
+              for k, v in metrics.items() if k not in ("cost", "connected")}
+    if batch is not None:
+        for k in ("edges", "edge_mask", "edge_len"):
+            if k in batch:
+                sample[k] = jnp.asarray(np.asarray(batch[k]))
+        if vp is None and "edges" in batch:
+            # Heuristic lower bound on the PHY count (exact when the
+            # highest-numbered PHY carries a link); pass ``vp`` for terms
+            # that size arrays by the true layout.Vp.
+            vp = int(np.asarray(batch["edges"]).max()) + 1
+    row = jnp.asarray(norms_vec(norm))
+    params = spec.param_dict()
+    out = jax.vmap(lambda s: entry.fn(dict(s, Vp=vp or 0),
+                                      _norms_dict_from_row(row), objective,
+                                      params))(sample)
+    return np.asarray(out, np.float64)
+
+
+def objective_cost_host(metrics: dict, objective: Objective, norm, *,
+                        batch: dict | None = None,
+                        vp: int | None = None) -> np.ndarray:
+    """Batched float64 host cost.  For the default ``Objective`` this is
+    bit-for-bit ``cost.total_cost`` (same weights, same grouped float64
+    accumulation: all lat, all inv-thr, area).  Graph-dependent terms
+    (``link-length-cap``, ``node-degree``) additionally need the stacked
+    graph ``batch``; ``vp`` supplies the true ``layout.Vp`` to host-
+    fallback terms that size per-PHY arrays."""
+    cobj = compile_objective(objective)
+    norms = _host_norms(norm)
+    total = None
+    for spec, entry in zip(objective.terms, cobj.entries):
+        if entry.host_fn is not None:
+            v = np.asarray(entry.host_fn(metrics, batch, norms, objective,
+                                         spec.param_dict()), np.float64)
+        else:
+            v = _host_fallback(entry, objective, spec, metrics, batch, norm,
+                               vp)
+        v = spec.weight * v
+        total = v if total is None else total + v
+    if total is None:                       # no terms: zero cost
+        some = np.asarray(metrics["area"], np.float64)
+        total = np.zeros_like(some)
+    return total

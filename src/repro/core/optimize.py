@@ -16,19 +16,27 @@ Two execution styles coexist:
 * **Host-loop** (``best_random`` / ``genetic_algorithm`` /
   ``simulated_annealing``): individuals are generated/mutated/merged one at
   a time in host Python with retry-until-connected, then scored in batches.
-  BR and GA are written as *step generators* (``best_random_steps`` /
-  ``genetic_algorithm_steps``) that yield graph batches and receive
-  ``(costs, metrics)`` — ``_drive`` runs one generator against one
-  Evaluator, :func:`drive_stacked` runs several in lockstep with their
-  scoring requests stacked into single vmapped calls (the ``run_sweep``
-  cross-config fast path).
+  All three are written as *step generators* (``best_random_steps`` /
+  ``genetic_algorithm_steps`` / ``simulated_annealing_steps``) that yield
+  scoring requests and receive ``(costs, metrics)`` — ``_drive`` runs one
+  generator against one Evaluator, :func:`drive_stacked` runs several in
+  lockstep with their scoring requests stacked into single vmapped calls
+  (the ``run_sweep`` cross-config fast path).
 * **Device-resident** (``best_random_batched`` / ``genetic_algorithm_batched``
   / ``simulated_annealing_batched``): whole generations / chain-blocks are
   produced by :class:`DevicePipeline` as fused generate→graph→score batched
   calls over stacked arrays — fully on device for homogeneous grids, with a
   vectorized host corner-placement stage for heterogeneous archs — and
   invalid individuals are masked-and-resampled in batch instead of retried
-  one by one.
+  one by one.  These too are step generators (``*_batched_steps``) whose
+  requests are pre-stacked device batch dicts, so they stack across
+  configs in :func:`drive_stacked` exactly like the host loops.
+
+Cost evaluation is in-scorer: the Evaluator's jitted scorer carries the
+compiled :class:`repro.core.objective.Objective`, emits a per-placement
+``cost`` next to the metrics (normalizers enter as a runtime vector), and
+``Evaluator.topk`` ranks a candidate batch on device in the same call —
+there is no host-numpy cost loop on the hot path.
 """
 from __future__ import annotations
 
@@ -40,10 +48,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .cost import CostNormalizers, total_cost
+from .cost import CostNormalizers
+from .objective import (NORM_DIM, Objective, norms_vec,
+                        objective_cost_host)
 from .placement_hetero import HeteroRep
 from .placement_homog import HomogRep
-from .proxies import make_scorer
+from .proxies import make_ranker, make_scorer
 from .topology import (HeteroGraphBatch, HomogGraphBatch, ScoreGraph,
                        stack_graphs)
 
@@ -61,28 +71,54 @@ class OptResult:
 
 
 class Evaluator:
-    """rep + scorer + cost normalizers -> batched get_cost()."""
+    """rep + scorer + objective + cost normalizers -> batched get_cost().
+
+    ``objective`` defaults to the arch's (deprecated) ``w_*`` weights via
+    :meth:`Objective.from_arch`.  When a pre-built ``scorer`` is passed it
+    must have been compiled with the *same* objective (``api.get_scorer``
+    keys its cache accordingly).
+    """
 
     def __init__(self, rep, arch, *, rng: np.random.Generator,
                  norm_samples: int = 500, chunk: int = 16, fw_impl=None,
-                 scorer=None):
+                 scorer=None, objective: Objective | None = None):
         self.rep = rep
         self.arch = arch
+        self.objective = (objective if objective is not None
+                          else Objective.from_arch(arch))
         if scorer is not None:
             # Pre-built (usually cached) jitted scorer — see api.get_scorer.
             self.scorer = scorer
         else:
-            kw = {"chunk": chunk}
+            kw = {"chunk": chunk, "objective": self.objective}
             if fw_impl is not None:
                 kw["fw_impl"] = fw_impl
             self.scorer = make_scorer(rep.layout, **kw)
         self.n_generated = 0
         self.n_score_calls = 0
         self._pipeline: "DevicePipeline | None" = None
+        self._ranker = None
+        # Norm-sample draws are scored before normalizers exist; the
+        # device cost of those calls is computed against all-ones norms
+        # and never consumed.
+        self._norm_vec = np.ones(NORM_DIM, np.float32)
         sols, graphs = self.generate_valid(
             lambda r: self.rep.random(r), rng, norm_samples)
         metrics = self.score(graphs)
-        self.norm = CostNormalizers.from_samples(metrics)
+        self.norm = CostNormalizers.from_samples(
+            metrics, policy=self.objective.normalizer)
+        self._norm_vec = norms_vec(self.norm)
+
+    @property
+    def norm_vec(self) -> np.ndarray:
+        """Normalizers as the scorer's runtime [NORM_DIM] vector."""
+        return self._norm_vec
+
+    @property
+    def degenerate_norms(self) -> tuple:
+        """Traffic types whose normalizer fell back to 1.0 (see
+        ``CostNormalizers.degenerate``)."""
+        return self.norm.degenerate
 
     # -- generation with the paper's retry-until-connected semantics -------
     def generate_valid(self, op, rng: np.random.Generator, n: int,
@@ -104,17 +140,46 @@ class Evaluator:
     def score(self, graphs: list[ScoreGraph]) -> dict:
         return self.score_batch(stack_graphs(graphs))
 
-    def score_batch(self, batch: dict) -> dict:
-        """Score pre-stacked (host or device) ScoreGraph arrays."""
+    def score_batch(self, batch: dict, norms=None) -> dict:
+        """Score pre-stacked (host or device) ScoreGraph arrays.  ``norms``
+        overrides the evaluator's normalizer vector (e.g. per-row norms in
+        stacked cross-run scoring)."""
         self.n_score_calls += 1
-        return {k: np.asarray(v) for k, v in self.scorer(batch).items()}
+        out = self.scorer(batch, self._norm_vec if norms is None else norms)
+        return {k: np.asarray(v) for k, v in out.items()}
 
     def costs_from(self, metrics: dict) -> np.ndarray:
-        return np.asarray(total_cost(metrics, self.arch, self.norm))
+        """Per-placement cost — the scorer's in-jit ``cost`` when present
+        (always, for objective-compiled scorers); the float64 host
+        evaluation of the objective otherwise (metrics-only terms)."""
+        if "cost" in metrics:
+            return np.array(metrics["cost"])   # writable copy, not a view
+        return objective_cost_host(metrics, self.objective, self.norm)
 
     def costs(self, graphs: list[ScoreGraph]) -> tuple[np.ndarray, dict]:
         metrics = self.score(graphs)
         return self.costs_from(metrics), metrics
+
+    def topk(self, graphs_or_batch, k: int = 1
+             ) -> tuple[np.ndarray, np.ndarray]:
+        """In-scorer ranking: score + select the ``k`` cheapest placements
+        on device in one fused jitted call.  Accepts a list[ScoreGraph] or
+        a stacked batch dict; returns ``(costs [k], indices [k])`` in
+        ascending-cost order.  A batch's own ``connected`` flags (the
+        hetero Borůvka-component rule, stricter than the scorer's FW
+        reachability) and ``overflow`` flags demote the affected rows to
+        infinite cost instead of being silently dropped."""
+        self.n_score_calls += 1
+        if self._ranker is None:
+            self._ranker = make_ranker(self.scorer)
+        batch, gconn, _ = _request_parts(graphs_or_batch)
+        ovf = batch.pop("overflow", None)
+        valid = None if gconn is None else np.asarray(gconn)
+        if ovf is not None and np.asarray(ovf).any():
+            ok = ~np.asarray(ovf)
+            valid = ok if valid is None else valid & ok
+        c, i = self._ranker(batch, self._norm_vec, k=k, valid=valid)
+        return np.asarray(c), np.asarray(i)
 
     def pipeline(self) -> "DevicePipeline":
         """Cached device-resident generate→graph→score pipeline."""
@@ -128,17 +193,38 @@ def _metrics_row(metrics: dict, i: int) -> dict:
 
 
 # ---------------------------------------------------------------------------
-# Step-generator execution: BR/GA yield graph batches to be scored and
-# receive (costs, metrics) back.  _drive runs one generator against one
+# Step-generator execution.  Optimizers yield *scoring requests* — either a
+# list of host ScoreGraphs or a pre-stacked (device) batch dict, optionally
+# carrying its own ``connected`` flags (the hetero Borůvka-component rule,
+# which overrides the scorer's FW reachability) — and receive
+# ``(costs, metrics)`` back.  _drive runs one generator against one
 # Evaluator (the classic entry points below); drive_stacked (bottom of this
-# module) runs many in lockstep with stacked scoring calls.
+# module) runs many in lockstep with their requests concatenated into
+# single scorer calls.
 # ---------------------------------------------------------------------------
+
+def _request_parts(req):
+    """Normalize a scoring request to ``(batch, conn_override, size)``."""
+    if isinstance(req, dict):
+        batch = dict(req)
+        gconn = batch.pop("connected", None)
+        return batch, gconn, int(batch["W"].shape[0])
+    return stack_graphs(req), None, len(req)
+
+
+def _score_request(ev: Evaluator, req) -> tuple[np.ndarray, dict]:
+    batch, gconn, _ = _request_parts(req)
+    metrics = ev.score_batch(batch)
+    if gconn is not None:
+        metrics["connected"] = np.asarray(gconn)
+    return ev.costs_from(metrics), metrics
+
 
 def _drive(gen, ev: Evaluator) -> OptResult:
     try:
-        graphs = next(gen)
+        req = next(gen)
         while True:
-            graphs = gen.send(ev.costs(graphs))
+            req = gen.send(_score_request(ev, req))
     except StopIteration as e:
         return e.value
 
@@ -277,16 +363,17 @@ def _sa_cool(temps: np.ndarray, block_costs: list[np.ndarray],
     return alpha * temps / (1.0 + beta * temps / sigma)
 
 
-def simulated_annealing(ev: Evaluator, rng: np.random.Generator, *,
-                        t0_temp: float, block_len: int,
-                        alpha: float = 1.0, beta: float = 5.0,
-                        chains: int = 1,
-                        time_budget_s: float | None = None,
-                        max_iters: int | None = None) -> OptResult:
+def simulated_annealing_steps(ev: Evaluator, rng: np.random.Generator, *,
+                              t0_temp: float, block_len: int,
+                              alpha: float = 1.0, beta: float = 5.0,
+                              chains: int = 1,
+                              time_budget_s: float | None = None,
+                              max_iters: int | None = None):
+    """Generator form of :func:`simulated_annealing` (yields graphs)."""
     res = OptResult(None, np.inf, {})
     tstart = time.monotonic()
     sols, graphs = ev.generate_valid(ev.rep.random, rng, chains)
-    costs, metrics = ev.costs(graphs)
+    costs, metrics = yield graphs
     res.n_evaluated += chains
     temps = np.full(chains, float(t0_temp))
     block_costs: list[np.ndarray] = []
@@ -307,7 +394,7 @@ def simulated_annealing(ev: Evaluator, rng: np.random.Generator, *,
                 lambda r, c=c: ev.rep.mutate(sols[c], r), rng, 1)
             nb_sols += s
             nb_graphs += g
-        nb_costs, nb_metrics = ev.costs(nb_graphs)
+        nb_costs, nb_metrics = yield nb_graphs
         res.n_evaluated += chains
         accept = _sa_accept(rng, nb_costs - costs, temps)
         for c in range(chains):
@@ -329,6 +416,18 @@ def simulated_annealing(ev: Evaluator, rng: np.random.Generator, *,
     res.n_generated = ev.n_generated
     res.normalizers = ev.norm
     return res
+
+
+def simulated_annealing(ev: Evaluator, rng: np.random.Generator, *,
+                        t0_temp: float, block_len: int,
+                        alpha: float = 1.0, beta: float = 5.0,
+                        chains: int = 1,
+                        time_budget_s: float | None = None,
+                        max_iters: int | None = None) -> OptResult:
+    return _drive(simulated_annealing_steps(
+        ev, rng, t0_temp=t0_temp, block_len=block_len, alpha=alpha,
+        beta=beta, chains=chains, time_budget_s=time_budget_s,
+        max_iters=max_iters), ev)
 
 
 # ---------------------------------------------------------------------------
@@ -438,6 +537,7 @@ class DevicePipeline:
                         batch["W"][b] = g.W
                         batch["edges"][b] = g.edges
                         batch["edge_mask"][b] = g.edge_mask
+                        batch["edge_len"][b] = g.edge_len
                         batch["area"][b] = g.area
                         batch["connected"][b] = g.connected
                 return batch
@@ -465,18 +565,10 @@ class DevicePipeline:
     def _key(self, rng: np.random.Generator):
         return jax.random.PRNGKey(int(rng.integers(2 ** 31 - 1)))
 
-    def _score_masked(self, batch: dict) -> dict:
-        """Score one produced batch; a graph stage's own ``connected``
-        (the hetero Borůvka-component flag) overrides the scorer's."""
-        gconn = batch.pop("connected", None)
-        metrics = {k: np.array(v) for k, v in
-                   self.ev.score_batch(batch).items()}
-        if gconn is not None:
-            metrics["connected"] = np.array(gconn)
-        return metrics
-
-    def _until_connected(self, rng, make, n, max_rounds: int = 500):
-        """Run ``make`` until every slot holds a connected placement.
+    def _until_connected_steps(self, rng, make, n, max_rounds: int = 500):
+        """Generator: run ``make`` until every slot holds a connected
+        placement, yielding each produced batch as a scoring request and
+        receiving ``(costs, metrics)`` back.
 
         ``make(key, idx)`` produces one candidate per entry of ``idx``
         (slot indices; repeats allowed).  The first round fills every
@@ -488,24 +580,29 @@ class DevicePipeline:
 
         A graph stage may put its own ``connected`` into the batch dict
         (the hetero path's Borůvka-component flag, which matches the host
-        union-find rule exactly); it then overrides the scorer's
-        FW-reachability output.
+        union-find rule exactly); the request scorer
+        (:func:`_score_request` or :func:`drive_stacked`) then lets it
+        override the scorer's FW-reachability output.
+
+        Returns ``(t, r, metrics, costs)`` for the filled slots.
         """
         t, r, batch = make(self._key(rng), np.arange(n))
-        metrics = self._score_masked(batch)
+        costs, metrics = yield batch
+        costs = np.array(costs)
+        metrics = {k: np.array(v) for k, v in metrics.items()}
         self.ev.n_generated += n
         conn = metrics["connected"].astype(bool)
         for _ in range(max_rounds):
             bad = np.nonzero(~conn)[0]
             if not len(bad):
-                return t, r, metrics
+                return t, r, metrics, costs
             size = 1 << (len(bad) - 1).bit_length()
             size = min(max(size, min(8, n)), n)
             idx = bad[np.arange(size) % len(bad)]
             t2, r2, batch2 = make(self._key(rng), idx)
-            m2 = self._score_masked(batch2)
+            c2, m2 = yield batch2
             self.ev.n_generated += size
-            conn2 = m2["connected"].astype(bool)
+            conn2 = np.asarray(m2["connected"]).astype(bool)
             slots, rows = [], []
             for i in range(size):
                 s = int(idx[i])
@@ -519,26 +616,48 @@ class DevicePipeline:
                 r = r.at[jnp.asarray(sl)].set(r2[jnp.asarray(rw)])
                 for k, v in metrics.items():
                     v[sl] = np.asarray(m2[k])[rw]
+                costs[sl] = np.asarray(c2)[rw]
         raise RuntimeError(  # pragma: no cover - pathological architecture
             "could not batch-generate connected placements")
 
-    # -- batched counterparts of the representation operators ---------------
-    def sample_random(self, rng, n: int):
-        return self._until_connected(
+    # -- generator forms (used by the *_batched_steps optimizers) -----------
+    def sample_random_steps(self, rng, n: int):
+        return self._until_connected_steps(
             rng, lambda k, idx: self._gen(k, len(idx)), n)
 
-    def sample_mutants(self, rng, t, r):
+    def sample_mutants_steps(self, rng, t, r):
         def make(k, idx):
             i = jnp.asarray(idx)
             return self._mut(k, t[i], r[i])
-        return self._until_connected(rng, make, t.shape[0])
+        return self._until_connected_steps(rng, make, t.shape[0])
 
-    def sample_children(self, rng, pat, par, pbt, pbr, p_mutation: float):
+    def sample_children_steps(self, rng, pat, par, pbt, pbr,
+                              p_mutation: float):
         def make(k, idx):
             i = jnp.asarray(idx)
             return self._child(k, pat[i], par[i], pbt[i], pbr[i],
                                p_mutation)
-        return self._until_connected(rng, make, pat.shape[0])
+        return self._until_connected_steps(rng, make, pat.shape[0])
+
+    # -- direct batched counterparts of the representation operators --------
+    def _run(self, gen):
+        try:
+            req = next(gen)
+            while True:
+                req = gen.send(_score_request(self.ev, req))
+        except StopIteration as e:
+            t, r, metrics, _ = e.value
+            return t, r, metrics
+
+    def sample_random(self, rng, n: int):
+        return self._run(self.sample_random_steps(rng, n))
+
+    def sample_mutants(self, rng, t, r):
+        return self._run(self.sample_mutants_steps(rng, t, r))
+
+    def sample_children(self, rng, pat, par, pbt, pbr, p_mutation: float):
+        return self._run(self.sample_children_steps(rng, pat, par, pbt, pbr,
+                                                    p_mutation))
 
 
 def _sol_at(t, r, i: int):
@@ -546,11 +665,11 @@ def _sol_at(t, r, i: int):
     return (np.asarray(t[i]), np.asarray(r[i]))
 
 
-def best_random_batched(ev: Evaluator, rng: np.random.Generator, *,
-                        time_budget_s: float | None = None,
-                        max_evals: int | None = None,
-                        batch: int = 32) -> OptResult:
-    """BR over the device pipeline: one fused call per batch."""
+def best_random_batched_steps(ev: Evaluator, rng: np.random.Generator, *,
+                              time_budget_s: float | None = None,
+                              max_evals: int | None = None,
+                              batch: int = 32):
+    """BR over the device pipeline: one fused request per batch."""
     pipe = ev.pipeline()
     res = OptResult(None, np.inf, {})
     t0 = time.monotonic()
@@ -559,8 +678,7 @@ def best_random_batched(ev: Evaluator, rng: np.random.Generator, *,
             break
         if max_evals is not None and res.n_evaluated >= max_evals:
             break
-        t, r, metrics = pipe.sample_random(rng, batch)
-        costs = ev.costs_from(metrics)
+        t, r, metrics, costs = yield from pipe.sample_random_steps(rng, batch)
         res.n_evaluated += batch
         i = int(np.argmin(costs))
         if costs[i] < res.best_cost:
@@ -574,22 +692,29 @@ def best_random_batched(ev: Evaluator, rng: np.random.Generator, *,
     return res
 
 
-def genetic_algorithm_batched(ev: Evaluator, rng: np.random.Generator, *,
-                              population: int, elitism: int, tournament: int,
-                              p_mutation: float = 0.5,
-                              time_budget_s: float | None = None,
-                              max_generations: int | None = None
-                              ) -> OptResult:
-    """GA whose whole generation (merge + mutate + graph + score) is one
-    fused device call; selection stays host-side on the cost vector.
-    Individuals are scored once, at creation (the host loop re-scores the
-    full population every generation), so ``n_evaluated`` counts scored
-    placements: ``population + generations * (population - elitism)``."""
+def best_random_batched(ev: Evaluator, rng: np.random.Generator, *,
+                        time_budget_s: float | None = None,
+                        max_evals: int | None = None,
+                        batch: int = 32) -> OptResult:
+    """BR over the device pipeline: one fused call per batch."""
+    return _drive(best_random_batched_steps(
+        ev, rng, time_budget_s=time_budget_s, max_evals=max_evals,
+        batch=batch), ev)
+
+
+def genetic_algorithm_batched_steps(ev: Evaluator,
+                                    rng: np.random.Generator, *,
+                                    population: int, elitism: int,
+                                    tournament: int,
+                                    p_mutation: float = 0.5,
+                                    time_budget_s: float | None = None,
+                                    max_generations: int | None = None):
+    """Generator form of :func:`genetic_algorithm_batched`."""
     pipe = ev.pipeline()
     res = OptResult(None, np.inf, {})
     t0 = time.monotonic()
-    t, r, metrics = pipe.sample_random(rng, population)
-    costs = ev.costs_from(metrics)
+    t, r, metrics, costs = yield from pipe.sample_random_steps(rng,
+                                                               population)
     res.n_evaluated += population
     gen = 0
     while True:
@@ -615,10 +740,9 @@ def genetic_algorithm_batched(ev: Evaluator, rng: np.random.Generator, *,
         n_child = population - elitism
         pa = np.array([tournament_pick() for _ in range(n_child)])
         pb = np.array([tournament_pick() for _ in range(n_child)])
-        ct, cr, cm = pipe.sample_children(
+        ct, cr, cm, ccosts = yield from pipe.sample_children_steps(
             rng, t[jnp.asarray(pa)], r[jnp.asarray(pa)],
             t[jnp.asarray(pb)], r[jnp.asarray(pb)], p_mutation)
-        ccosts = ev.costs_from(cm)
         res.n_evaluated += n_child
         elite = order[:elitism]
         t = jnp.concatenate([t[jnp.asarray(elite)], ct])
@@ -631,21 +755,35 @@ def genetic_algorithm_batched(ev: Evaluator, rng: np.random.Generator, *,
     return res
 
 
-def simulated_annealing_batched(ev: Evaluator, rng: np.random.Generator, *,
-                                t0_temp: float, block_len: int,
-                                alpha: float = 1.0, beta: float = 5.0,
-                                chains: int = 1,
-                                time_budget_s: float | None = None,
-                                max_iters: int | None = None) -> OptResult:
-    """SA whose chain-step (mutate all chains + graph + score) is one fused
-    device call; Metropolis acceptance and adaptive cooling are host-side
-    (identical to the host loop's rule on identically distributed
-    proposals)."""
+def genetic_algorithm_batched(ev: Evaluator, rng: np.random.Generator, *,
+                              population: int, elitism: int, tournament: int,
+                              p_mutation: float = 0.5,
+                              time_budget_s: float | None = None,
+                              max_generations: int | None = None
+                              ) -> OptResult:
+    """GA whose whole generation (merge + mutate + graph + score) is one
+    fused device call; selection stays host-side on the cost vector.
+    Individuals are scored once, at creation (the host loop re-scores the
+    full population every generation), so ``n_evaluated`` counts scored
+    placements: ``population + generations * (population - elitism)``."""
+    return _drive(genetic_algorithm_batched_steps(
+        ev, rng, population=population, elitism=elitism,
+        tournament=tournament, p_mutation=p_mutation,
+        time_budget_s=time_budget_s, max_generations=max_generations), ev)
+
+
+def simulated_annealing_batched_steps(ev: Evaluator,
+                                      rng: np.random.Generator, *,
+                                      t0_temp: float, block_len: int,
+                                      alpha: float = 1.0, beta: float = 5.0,
+                                      chains: int = 1,
+                                      time_budget_s: float | None = None,
+                                      max_iters: int | None = None):
+    """Generator form of :func:`simulated_annealing_batched`."""
     pipe = ev.pipeline()
     res = OptResult(None, np.inf, {})
     tstart = time.monotonic()
-    t, r, metrics = pipe.sample_random(rng, chains)
-    costs = ev.costs_from(metrics)
+    t, r, metrics, costs = yield from pipe.sample_random_steps(rng, chains)
     res.n_evaluated += chains
     temps = np.full(chains, float(t0_temp))
     block_costs: list[np.ndarray] = []
@@ -660,8 +798,7 @@ def simulated_annealing_batched(ev: Evaluator, rng: np.random.Generator, *,
             break
         if max_iters is not None and it >= max_iters:
             break
-        nt, nr, nm = pipe.sample_mutants(rng, t, r)
-        ncosts = ev.costs_from(nm)
+        nt, nr, nm, ncosts = yield from pipe.sample_mutants_steps(rng, t, r)
         res.n_evaluated += chains
         accept = _sa_accept(rng, ncosts - costs, temps)
         acc = jnp.asarray(accept).reshape((-1,) + (1,) * (t.ndim - 1))
@@ -685,6 +822,22 @@ def simulated_annealing_batched(ev: Evaluator, rng: np.random.Generator, *,
     return res
 
 
+def simulated_annealing_batched(ev: Evaluator, rng: np.random.Generator, *,
+                                t0_temp: float, block_len: int,
+                                alpha: float = 1.0, beta: float = 5.0,
+                                chains: int = 1,
+                                time_budget_s: float | None = None,
+                                max_iters: int | None = None) -> OptResult:
+    """SA whose chain-step (mutate all chains + graph + score) is one fused
+    device call; Metropolis acceptance and adaptive cooling are host-side
+    (identical to the host loop's rule on identically distributed
+    proposals)."""
+    return _drive(simulated_annealing_batched_steps(
+        ev, rng, t0_temp=t0_temp, block_len=block_len, alpha=alpha,
+        beta=beta, chains=chains, time_budget_s=time_budget_s,
+        max_iters=max_iters), ev)
+
+
 # ---------------------------------------------------------------------------
 # Stacked execution of step generators (run_sweep cross-config batching).
 # ---------------------------------------------------------------------------
@@ -694,13 +847,15 @@ def drive_stacked(items: list) -> tuple[list, list[int], list[float]]:
     scoring requests into one batched scorer call.
 
     ``items`` is a list of ``(generator, evaluator)`` pairs whose
-    evaluators share one jitted scorer (same layout/chunk/backend).  Each
-    round collects the pending graph batches of every live generator,
-    scores their concatenation once, splits the metrics back, converts
-    them to costs with each run's own normalizers, and resumes the
-    generators.  Results are bit-for-bit identical to driving each
-    generator alone (the scorer is vmapped elementwise), with ~k fewer
-    dispatches.
+    evaluators share one jitted scorer (same layout/chunk/backend/
+    objective).  Each round collects the pending scoring requests of every
+    live generator — host graph lists and device batch dicts mix freely —
+    scores their concatenation once with *per-row normalizer vectors* (each
+    row carries its own run's norms, so the in-scorer ``cost`` is exact for
+    every run), splits the metrics back (restoring per-request
+    ``connected`` overrides), and resumes the generators.  Results are
+    bit-for-bit identical to driving each generator alone (the scorer is
+    vmapped elementwise), with ~k fewer dispatches.
 
     Returns ``(results, n_generated, seconds)`` aligned with ``items`` —
     ``n_generated[i]`` is the number of placements generated by run ``i``
@@ -714,41 +869,52 @@ def drive_stacked(items: list) -> tuple[list, list[int], list[float]]:
     results: list = [None] * n
     gen_counts = [0] * n
     secs = [0.0] * n
-    reqs: dict[int, list] = {}
-    for i, (gen, ev) in enumerate(items):
+    reqs: dict[int, tuple] = {}
+
+    def _resume(i, send=None):
+        gen, ev = items[i]
         g0 = ev.n_generated
         ta = time.monotonic()
         try:
-            reqs[i] = next(gen)
+            req = next(gen) if send is None else gen.send(send)
+            reqs[i] = _request_parts(req)
         except StopIteration as e:
             results[i] = e.value
         secs[i] += time.monotonic() - ta
         gen_counts[i] += ev.n_generated - g0
+
+    for i in range(n):
+        _resume(i)
     while reqs:
         order = sorted(reqs)
-        sizes = [len(reqs[i]) for i in order]
-        all_graphs = [g for i in order for g in reqs[i]]
+        parts = {i: reqs[i] for i in order}
+        reqs = {}
+        sizes = [parts[i][2] for i in order]
+        keys = sorted(parts[order[0]][0])
+        for i in order[1:]:         # fail loudly on heterogeneous requests
+            if sorted(parts[i][0]) != keys:
+                raise ValueError(
+                    f"stacked scoring requests disagree on batch keys: run "
+                    f"{order[0]} has {keys}, run {i} has "
+                    f"{sorted(parts[i][0])}")
+        cat = {k: jnp.concatenate([jnp.asarray(parts[i][0][k])
+                                   for i in order]) for k in keys}
+        norms = np.concatenate(
+            [np.broadcast_to(items[i][1].norm_vec, (sz, NORM_DIM))
+             for i, sz in zip(order, sizes)])
         ts = time.monotonic()
-        metrics = items[order[0]][1].score(all_graphs)
+        metrics = items[order[0]][1].score_batch(cat, norms=norms)
         t_score = time.monotonic() - ts
         total = max(sum(sizes), 1)
-        new_reqs: dict[int, list] = {}
         off = 0
         for i, sz in zip(order, sizes):
             mi = {k: v[off:off + sz] for k, v in metrics.items()}
+            if parts[i][1] is not None:        # per-request conn override
+                mi["connected"] = np.asarray(parts[i][1])
             off += sz
             secs[i] += t_score * (sz / total)
-            gen, ev = items[i]
-            g0 = ev.n_generated
-            ta = time.monotonic()
-            ci = ev.costs_from(mi)
-            try:
-                new_reqs[i] = gen.send((ci, mi))
-            except StopIteration as e:
-                results[i] = e.value
-            secs[i] += time.monotonic() - ta
-            gen_counts[i] += ev.n_generated - g0
-        reqs = new_reqs
+            ci = items[i][1].costs_from(mi)
+            _resume(i, (ci, mi))
     return results, gen_counts, secs
 
 

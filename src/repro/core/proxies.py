@@ -28,6 +28,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .chiplets import COMPUTE, IO, MEMORY, TRAFFIC_TYPES, ArchSpec
+from .objective import NORM_DIM, compile_objective
 
 INF_CUT = 1.0e8   # entries >= this are treated as "unreachable"
 _COUNT_CLIP = 1.0e30
@@ -163,7 +164,8 @@ def _metrics_one(W, edges, edge_mask, area, *, pairs, conn, fw_impl):
     return out
 
 
-def make_scorer(layout: Layout, *, fw_impl=fw_counts_ref, chunk: int = 16):
+def make_scorer(layout: Layout, *, fw_impl=fw_counts_ref, chunk: int = 16,
+                objective=None):
     """Build a jitted batched scorer: dict of stacked arrays -> metric dict.
 
     Placements are scored in chunks of ``chunk`` via ``lax.map`` to bound
@@ -173,23 +175,50 @@ def make_scorer(layout: Layout, *, fw_impl=fw_counts_ref, chunk: int = 16):
     per placement (virtual all-src -> all-sink reachability on the FW
     distance matrix) so batched optimizers can mask-and-resample invalid
     individuals without a host-side union-find pass.
+
+    With an ``objective`` (an :class:`repro.core.objective.Objective`),
+    the compiled cost terms are lowered into the same jitted call and the
+    output gains a per-placement ``cost`` — no host-side cost formula.
+    The normalizer values enter as the runtime ``norms`` argument (a
+    ``[NORM_DIM]`` vector, or ``[P, NORM_DIM]`` for per-row normalizers in
+    stacked cross-run scoring), so normalizer draws never retrace.
     """
     pairs = _type_pairs(layout)
     conn = (layout.Vp + np.arange(layout.N, dtype=np.int32),
             layout.Vp + layout.N + np.arange(layout.N, dtype=np.int32))
     one = functools.partial(_metrics_one, pairs=pairs, conn=conn,
                             fw_impl=fw_impl)
+    cobj = compile_objective(objective, layout) \
+        if objective is not None else None
+    Vp = layout.Vp
 
     @jax.jit
-    def score(batch):
+    def score(batch, norms=None):
+        batch = dict(batch)
         P = batch["W"].shape[0]
+        if cobj is not None:
+            if norms is None:
+                norms = jnp.ones((NORM_DIM,), jnp.float32)
+            batch["_norms"] = jnp.broadcast_to(
+                jnp.asarray(norms, jnp.float32), (P, NORM_DIM))
         pad = (-P) % chunk
         padded = {k: jnp.concatenate([v, jnp.repeat(v[:1], pad, axis=0)])
                   if pad else v for k, v in batch.items()}
 
         def score_chunk(c):
-            return jax.vmap(lambda w, e, m, a: one(w, e, m, a))(
-                c["W"], c["edges"], c["edge_mask"], c["area"])
+            extras = {k: c[k] for k in ("edge_len", "_norms") if k in c}
+
+            def one_full(w, e, m, a, ex):
+                out = one(w, e, m, a)
+                if cobj is not None:
+                    sample = dict(out, edges=e, edge_mask=m, area=a, Vp=Vp)
+                    if "edge_len" in ex:
+                        sample["edge_len"] = ex["edge_len"]
+                    out["cost"] = cobj.cost_one(sample, ex["_norms"])
+                return out
+
+            return jax.vmap(one_full)(c["W"], c["edges"], c["edge_mask"],
+                                      c["area"], extras)
 
         chunked = {k: v.reshape((-1, chunk) + v.shape[1:])
                    for k, v in padded.items()}
@@ -197,6 +226,26 @@ def make_scorer(layout: Layout, *, fw_impl=fw_counts_ref, chunk: int = 16):
         return {k: v.reshape(-1)[:P] for k, v in res.items()}
 
     return score
+
+
+def make_ranker(scorer):
+    """Fused in-scorer ranking: score a batch and select the ``k`` best
+    placements (ascending cost) on device in one jitted call.  ``scorer``
+    must have been built with an objective (it emits ``cost``).  Returns
+    ``rank(batch, norms, k, valid) -> (costs [k], indices [k])``; rows
+    where ``valid`` is False (e.g. the hetero Borůvka-component
+    connectivity rule, stricter than the scorer's FW reachability) rank
+    last with infinite cost."""
+    @functools.partial(jax.jit, static_argnames=("k",))
+    def rank(batch, norms, k: int = 1, valid=None):
+        out = scorer(batch, norms)
+        cost = out["cost"]
+        if valid is not None:
+            cost = jnp.where(jnp.asarray(valid), cost, jnp.inf)
+        neg, idx = jax.lax.top_k(-cost, k)
+        return -neg, idx
+
+    return rank
 
 
 METRIC_KEYS = tuple(

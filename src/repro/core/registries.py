@@ -1,6 +1,7 @@
-"""Named registries for the experiment API (optimizers, scorer backends).
+"""Named registries for the experiment API (optimizers, scorer backends,
+objective terms).
 
-The PlaceIT pipeline is pluggable at two seams:
+The PlaceIT pipeline is pluggable at three seams:
 
 * **optimizers** — search algorithms over a placement representation, all
   with the uniform signature ``(evaluator, rng, budget, params) -> OptResult``
@@ -9,6 +10,10 @@ The PlaceIT pipeline is pluggable at two seams:
   that dominates evaluation time (paper Table V): the pure-XLA reference or
   the Pallas VMEM-resident kernel, selected by name (``"fw-ref"``,
   ``"fw-pallas"``).
+* **objective terms** — the summands of the placement cost function
+  (paper §IV-B): the built-in ``lat`` / ``inv-thr`` / ``area`` terms plus
+  penalty terms, composed into an ``objective.Objective`` and lowered into
+  the jitted scorer by ``objective.compile_objective``.
 
 Entries are registered with decorators::
 
@@ -18,6 +23,9 @@ Entries are registered with decorators::
     @register_scorer_backend("fw-mine")
     def _build():            # zero-arg factory -> fw_impl callable
         return my_fw_impl
+
+    @register_objective_term("power", host_fn=power_host)
+    def power(sample, norms, objective, params): ...   # jnp scalar
 
 Backends are registered as zero-arg *factories* so optional dependencies
 (e.g. Pallas) are only imported when the backend is actually selected.
@@ -63,8 +71,26 @@ class OptimizerEntry:
     params_cls: type        # typed hyper-parameter dataclass
 
 
+@dataclass(frozen=True)
+class ObjectiveTermEntry:
+    """One cost-function summand (see ``repro.core.objective``).
+
+    ``fn(sample, norms, objective, params) -> scalar`` is the per-placement
+    device implementation (pure ``jnp``; traced inside the jitted scorer's
+    vmap).  ``host_fn(metrics, batch, norms, objective, params) -> [B]
+    float64`` is the optional batched host-numpy implementation used for
+    reporting and for the legacy ``cost.total_cost`` equivalence; when
+    omitted, the device ``fn`` is vmapped on host arrays instead (float32).
+    """
+
+    name: str
+    fn: Callable
+    host_fn: Callable | None = None
+
+
 OPTIMIZERS = Registry("optimizer")
 SCORER_BACKENDS = Registry("scorer backend")
+OBJECTIVE_TERMS = Registry("objective term")
 
 
 def register_optimizer(name: str, *, params_cls: type):
@@ -82,6 +108,17 @@ def register_scorer_backend(name: str):
     def deco(factory):
         SCORER_BACKENDS.add(name, factory)
         return factory
+    return deco
+
+
+def register_objective_term(name: str, *, host_fn: Callable | None = None):
+    """Decorator: register a per-placement cost term
+    ``fn(sample, norms, objective, params) -> scalar`` (jnp; lowered into
+    the jitted scorer) under ``name``, with an optional float64 batched
+    ``host_fn`` for host-side reporting/equivalence paths."""
+    def deco(fn):
+        OBJECTIVE_TERMS.add(name, ObjectiveTermEntry(name, fn, host_fn))
+        return fn
     return deco
 
 

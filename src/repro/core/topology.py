@@ -61,6 +61,7 @@ class ScoreGraph:
     edge_mask: np.ndarray  # [E_max] bool
     area: np.float32
     connected: bool
+    edge_len: np.ndarray | None = None   # [E_max] float32 link lengths [mm]
 
     @property
     def V(self) -> int:
@@ -186,16 +187,20 @@ def build_score_graph(arch: ArchSpec, geo: PlacedPhys,
         W[idx, Vp + N + c] = 0.0      # own PHYs -> dst_c
     edges = np.zeros((e_max, 2), dtype=np.int32)
     mask = np.zeros((e_max,), dtype=bool)
+    elen = np.zeros((e_max,), dtype=np.float32)
     n_e = 0
     for p, q in links:
+        d = np.float32(arch.dist(tuple(geo.pos[p]), tuple(geo.pos[q])))
         for (u, v) in ((p, q), (q, p)):
             if n_e >= e_max:  # pragma: no cover - e_max sized generously
                 raise ValueError("e_max too small")
             edges[n_e] = (u, v)
             mask[n_e] = True
+            elen[n_e] = d
             n_e += 1
     return ScoreGraph(W=W, edges=edges, edge_mask=mask,
-                      area=np.float32(geo.area), connected=connected)
+                      area=np.float32(geo.area), connected=connected,
+                      edge_len=elen)
 
 
 def stack_graphs(graphs: list[ScoreGraph]) -> dict:
@@ -205,6 +210,9 @@ def stack_graphs(graphs: list[ScoreGraph]) -> dict:
         edges=np.stack([g.edges for g in graphs]),
         edge_mask=np.stack([g.edge_mask for g in graphs]),
         area=np.array([g.area for g in graphs], dtype=np.float32),
+        edge_len=np.stack([np.zeros(g.edges.shape[0], np.float32)
+                           if g.edge_len is None else g.edge_len
+                           for g in graphs]),
     )
 
 
@@ -292,6 +300,24 @@ class HomogGraphBatch:
         self._a_loc2 = np.array(loc2, np.int32)
         self._a_rot1 = np.array(rot1, np.int32)
         self._a_rot2 = np.array(rot2, np.int32)
+        # Static per-adjacency link lengths: distance between the facing
+        # side midpoints of the two cells (HomogRep.geometry's PHY spots;
+        # 0.0 for touching chiplets).  float32, matching the host
+        # build_score_graph's edge_len.
+        sz_mm = arch.chiplets[0].w
+        mids = {"n": (sz_mm / 2, sz_mm), "s": (sz_mm / 2, 0.0),
+                "e": (sz_mm, sz_mm / 2), "w": (0.0, sz_mm / 2)}
+
+        def _side_pos(cell, side):
+            r, c = divmod(int(cell), C)
+            mx, my = mids[side]
+            pa = np.array([c * sz_mm + mx, r * sz_mm + my], np.float32)
+            return (float(pa[0]), float(pa[1]))
+
+        alen = [np.float32(arch.dist(_side_pos(c1, "nesw"[l1]),
+                                     _side_pos(c2, "nesw"[l2])))
+                for c1, c2, l1, l2 in zip(cell1, cell2, loc1, loc2)]
+        self._a_len = jnp.asarray(np.array(alen, np.float32))
         # §V-A get_area: identical for every placement on the grid.
         sz = arch.chiplets[0].w * arch.chiplets[0].h
         self.area = np.float32(sz * R * C)
@@ -341,8 +367,12 @@ class HomogGraphBatch:
         edges = ed.reshape(B, self.e_max, 2).astype(jnp.int32)
         mask = jnp.broadcast_to(valid[:, :, None],
                                 valid.shape + (2,)).reshape(B, self.e_max)
+        elen = jnp.where(valid, self._a_len[None, :], 0.0)
+        edge_len = jnp.broadcast_to(elen[:, :, None],
+                                    elen.shape + (2,)).reshape(B, self.e_max)
         area = jnp.full((B,), self.area, jnp.float32)
-        return dict(W=W, edges=edges, edge_mask=mask, area=area)
+        return dict(W=W, edges=edges, edge_mask=mask, area=area,
+                    edge_len=edge_len)
 
 
 def build_score_graphs_batched(arch: ArchSpec, R: int, C: int,
@@ -457,6 +487,7 @@ class HeteroGraphBatch:
         overflow = valid.sum() > Ec
         srt = jnp.argsort(jnp.where(valid, dist, jnp.inf))[:Ec]
         eu, ev = u[srt], v[srt]
+        elen = dist[srt].astype(jnp.float32)
         evalid = valid[srt]
         rank = jnp.arange(Ec, dtype=jnp.int32)
         node = jnp.arange(Vp, dtype=jnp.int32)
@@ -496,10 +527,10 @@ class HeteroGraphBatch:
 
         _, aug = jax.lax.fori_loop(0, self._aug_rounds, aug_round,
                                    (used, jnp.zeros(Ec, bool)))
-        return sel | aug, eu, ev, comp, overflow
+        return sel | aug, eu, ev, elen, comp, overflow
 
     def _graph_one(self, pos: jnp.ndarray):
-        links, eu, ev, comp, overflow = self._links_one(pos)
+        links, eu, ev, elen, comp, overflow = self._links_one(pos)
         # Compact chosen links into fixed slots (weight order; the scorer is
         # edge-order invariant, and padding is zeroed like the host's).
         rank = jnp.arange(self.Ecap, dtype=jnp.int32)
@@ -507,16 +538,18 @@ class HeteroGraphBatch:
         smask = jnp.arange(self.L) < links.sum()
         su = jnp.where(smask, eu[order_idx], 0)
         sv = jnp.where(smask, ev[order_idx], 0)
+        sl = jnp.where(smask, elen[order_idx], 0.0)
         vals = jnp.where(smask, self._d2d, INF)       # INF scatter-min: no-op
         W = self._W_static.at[su, sv].min(vals).at[sv, su].min(vals)
         edges = jnp.stack([jnp.stack([su, sv], axis=-1),
                            jnp.stack([sv, su], axis=-1)],
                           axis=1).reshape(self.e_max, 2).astype(jnp.int32)
         mask = jnp.repeat(smask, 2)
+        edge_len = jnp.repeat(sl, 2)
         # Fixed host connectivity rule: one component covers every chiplet.
         cov = jnp.zeros((self.Vp, self.N), bool).at[comp].max(self._owner_oh)
         connected = cov.all(axis=1).any()
-        return W, edges, mask, connected, overflow
+        return W, edges, mask, edge_len, connected, overflow
 
     def build(self, ppos: jnp.ndarray, area: jnp.ndarray) -> dict:
         """[B, Vp, 2] PHY positions + [B] areas -> batched ScoreGraph arrays:
@@ -524,7 +557,7 @@ class HeteroGraphBatch:
         an ``overflow`` [B] flag (candidate count above Ecap; the caller
         must recompute those rows host-side — they are vanishingly rare).
         jit/vmap-able."""
-        W, edges, mask, conn, ovf = jax.vmap(self._graph_one)(ppos)
-        return dict(W=W, edges=edges, edge_mask=mask,
+        W, edges, mask, elen, conn, ovf = jax.vmap(self._graph_one)(ppos)
+        return dict(W=W, edges=edges, edge_mask=mask, edge_len=elen,
                     area=jnp.asarray(area, jnp.float32), connected=conn,
                     overflow=ovf)

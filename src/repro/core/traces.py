@@ -55,6 +55,35 @@ class TraceMix:
     p_coherence: float = 0.03     # produces the small C2C share
     p_wb_mem: float = 0.30        # writebacks that propagate M->I
 
+    def class_shares(self, flit_weighted: bool = True) -> dict:
+        """Expected traffic share per cost-function class (closed form).
+
+        Mirrors the emit structure of :func:`generate_trace` transaction by
+        transaction, folding both directions of a chiplet pair into the
+        proxy classes (``c2m`` includes M->C replies, ``m2i`` includes
+        I->M data; the traces carry no direct C<->I traffic so ``c2i`` is
+        0).  ``flit_weighted`` weighs packets by their flit count (ctrl 1 /
+        data 9) — the load a trace actually puts on links — instead of
+        counting messages.  Shares sum to 1; this is what
+        ``objective.TrafficMix.from_trace_mix`` turns into cost weights.
+        """
+        wc, wd = (CTRL_FLITS, DATA_FLITS) if flit_weighted else (1, 1)
+        p_coh, p_wb, p_l2 = self.p_coherence, self.p_writeback, self.p_l2_miss
+        p_hit = 1.0 - p_coh - p_wb - p_l2
+        n = {
+            # coherence fwd: C->M req, M->C' ctrl (both class c2m), C'->C data
+            "c2c": p_coh * wd,
+            "c2m": (p_coh * (wc + wc)
+                    + p_wb * wd                      # writeback C->M data
+                    + p_l2 * (wc + wd)               # L2 miss C->M + M->C
+                    + p_hit * (wc + wd)),            # read hit C->M + M->C
+            "c2i": 0.0,
+            # L2 miss M->I req + I->M data; writeback M->I with p_wb_mem
+            "m2i": p_l2 * (wc + wd) + p_wb * self.p_wb_mem * wd,
+        }
+        tot = sum(n.values())
+        return {k: v / tot for k, v in n.items()}
+
 
 def generate_trace(net: ChipletNet, regions=DEFAULT_REGIONS,
                    mix: TraceMix = TraceMix(), seed: int = 0,

@@ -345,3 +345,54 @@ def test_hetero_batched_optimizers_improve_and_return_valid_solutions():
         g = hrep.score_graph((order, rots))        # host-path validation
         assert g.connected
         assert res.history and res.history[-1][2] == res.best_cost
+
+
+# ---------------------------------------------------------------------------
+# Cross-config stacked scoring for the batched drivers + host SA (the
+# remaining ROADMAP stacking item): every optimizer is a step generator
+# now, so runs sharing a (layout, chunk, backend, objective) scorer fold
+# into drive_stacked lockstep execution with fewer dispatches and
+# bit-for-bit identical results.
+# ---------------------------------------------------------------------------
+
+def _stack_cfg(seed):
+    from repro.core.api import SAParams
+    return ExperimentConfig(
+        arch="homog32", algorithms=("sa", "ga-batched", "sa-batched"),
+        budget=Budget(evals=12), norm_samples=6, chunk=4, seed=seed,
+        params={"sa": {"chains": 2},
+                "ga-batched": {"population": 6, "elitism": 2,
+                               "tournament": 3},
+                "sa-batched": {"chains": 3}})
+
+
+def test_sweep_stacks_sa_and_batched_drivers_bit_for_bit():
+    from repro.core.api import run_sweep
+    cfgs = [_stack_cfg(s) for s in (0, 1)]
+    stacked = run_sweep(cfgs)
+    unstacked = run_sweep(cfgs, stack_scoring=False)
+    # one lockstep group covering all six runs (sa + both batched drivers
+    # share the single jitted scorer), with strictly fewer dispatches
+    assert stacked.stats.stacked_groups == 1
+    assert stacked.stats.score_calls < unstacked.stats.score_calls
+    for a, b in zip(stacked.records, unstacked.records):
+        assert (a.algorithm, a.repetition) == (b.algorithm, b.repetition)
+        assert a.result.best_cost == b.result.best_cost
+        assert a.result.n_evaluated == b.result.n_evaluated
+        assert a.result.n_generated == b.result.n_generated
+        assert [(n, c) for _, n, c in a.result.history] \
+            == [(n, c) for _, n, c in b.result.history]
+
+
+def test_hetero_batched_drivers_stack_too():
+    from repro.core.api import run_sweep
+    cfgs = [ExperimentConfig(
+        arch="hetero32", algorithms=("sa-batched",), budget=Budget(evals=8),
+        norm_samples=4, chunk=4, seed=s,
+        params={"sa-batched": {"chains": 4}}) for s in (0, 1)]
+    stacked = run_sweep(cfgs)
+    unstacked = run_sweep(cfgs, stack_scoring=False)
+    assert stacked.stats.stacked_groups == 1
+    for a, b in zip(stacked.records, unstacked.records):
+        assert a.result.best_cost == b.result.best_cost
+        assert a.result.n_generated == b.result.n_generated

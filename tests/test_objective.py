@@ -1,0 +1,359 @@
+"""Pluggable objective API: serialization round-trips, registry error
+paths, bit-for-bit equivalence of the default Objective with the legacy
+total_cost formula, device-vs-host cost agreement (including the new
+penalty terms), trace-derived mixes, normalizer policies, the degenerate-
+normalizer flag, and in-scorer ranking."""
+import dataclasses
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core.api import (Budget, ExperimentConfig, clear_scorer_cache,
+                            make_evaluator, make_rep, run_experiment,
+                            run_sweep, scorer_cache_stats)
+from repro.core.chiplets import TRAFFIC_TYPES, paper_arch
+from repro.core.cost import CostNormalizers, total_cost
+from repro.core.objective import (NORM_DIM, Objective, TermSpec, TrafficMix,
+                                  compile_objective, norms_vec,
+                                  objective_cost_host)
+from repro.core.registries import OBJECTIVE_TERMS, register_objective_term
+from repro.core.topology import stack_graphs
+from repro.core.traces import TraceMix
+
+
+def _evaluator(arch_name, config="baseline", objective=None, n=8):
+    arch = paper_arch(arch_name, config)
+    rep = make_rep(arch, arch_name)
+    return make_evaluator(rep, arch, rng=np.random.default_rng(0),
+                          norm_samples=n, chunk=4, objective=objective), rep
+
+
+def _scored(ev, n=6, seed=1):
+    rng = np.random.default_rng(seed)
+    sols, graphs = ev.generate_valid(ev.rep.random, rng, n)
+    return ev.score(graphs), stack_graphs(graphs)
+
+
+# ---------------------------------------------------------------------------
+# Serialization.
+# ---------------------------------------------------------------------------
+
+def test_traffic_mix_roundtrip_and_validation():
+    m = TrafficMix(lat=(1, 2, 3, 4), thr=(0.5, 0.5, 0.5, 0.5))
+    assert TrafficMix.from_dict(m.to_dict()) == m
+    assert TrafficMix.paper() == TrafficMix()
+    assert TrafficMix().lat == (0.1, 2.0, 0.1, 2.0)
+    with pytest.raises(ValueError, match="weights"):
+        TrafficMix(lat=(1, 2, 3))
+    with pytest.raises(ValueError, match="finite"):
+        TrafficMix(lat=(1, 2, 3, -4))
+    with pytest.raises(ValueError, match="unknown TrafficMix"):
+        TrafficMix.from_dict({"lat": [1, 2, 3, 4], "bogus": 1})
+
+
+def test_objective_roundtrip_dict_json():
+    obj = Objective(
+        mix=TrafficMix(lat=(1, 1, 1, 1), thr=(2, 2, 2, 2)), w_area=0.5,
+        normalizer="median",
+        terms=("lat", "inv-thr", "area",
+               {"name": "link-length-cap", "weight": 2.0,
+                "params": {"cap_mm": 1.5}}))
+    assert Objective.from_dict(obj.to_dict()) == obj
+    assert Objective.from_json(obj.to_json()) == obj
+    assert hash(Objective.from_json(obj.to_json())) == hash(obj)
+    # terms are normalized to TermSpec with sorted hashable params
+    assert obj.terms[3] == TermSpec("link-length-cap", weight=2.0,
+                                    params={"cap_mm": 1.5})
+    with pytest.raises(ValueError, match="unknown Objective keys"):
+        Objective.from_dict({"bogus": 1})
+    with pytest.raises(ValueError, match="normalizer policy"):
+        Objective(normalizer="nope")
+
+
+def test_experiment_config_carries_objective():
+    obj = Objective().with_terms(TermSpec("node-degree",
+                                          params={"max_degree": 3}))
+    cfg = ExperimentConfig(arch="homog32", objective=obj)
+    assert ExperimentConfig.from_dict(cfg.to_dict()) == cfg
+    assert ExperimentConfig.from_json(cfg.to_json()).objective == obj
+    # old serialized configs (no objective key) load with the paper default
+    d = cfg.to_dict()
+    del d["objective"]
+    assert ExperimentConfig.from_dict(d).objective == Objective()
+
+
+# ---------------------------------------------------------------------------
+# Registry error paths.
+# ---------------------------------------------------------------------------
+
+def test_unknown_term_raises_with_registered_list():
+    obj = Objective(terms=("lat", "no-such-term"))
+    with pytest.raises(KeyError, match="unknown objective term"):
+        compile_objective(obj)
+    # ... and therefore fails fast when an evaluator is built around it
+    with pytest.raises(KeyError, match="no-such-term"):
+        _evaluator("homog32", objective=obj)
+
+
+def test_duplicate_term_registration_raises():
+    assert "lat" in OBJECTIVE_TERMS
+    with pytest.raises(ValueError, match="duplicate objective term"):
+        @register_objective_term("lat")
+        def _dup(sample, norms, obj, params):  # pragma: no cover
+            return 0.0
+
+
+def test_custom_term_is_drop_in():
+    if "test-flat" not in OBJECTIVE_TERMS:
+        @register_objective_term("test-flat")
+        def _flat(sample, norms, obj, params):
+            return params.get("value", 1.0) + 0.0 * sample["area"]
+
+    ev, _ = _evaluator("homog32", objective=Objective().with_terms(
+        TermSpec("test-flat", weight=2.0, params={"value": 3.0})))
+    metrics, batch = _scored(ev, n=4)
+    base = objective_cost_host(metrics, Objective(), ev.norm)
+    np.testing.assert_allclose(ev.costs_from(metrics), base + 6.0,
+                               rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Equivalence: default Objective == legacy total_cost; device == host.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch_name",
+                         ["homog32", "homog64", "hetero32", "hetero64"])
+def test_default_objective_is_legacy_total_cost_bit_for_bit(arch_name):
+    from repro.core.cost import cost_components
+    arch = paper_arch(arch_name, "baseline")
+    ev, _ = _evaluator(arch_name, n=6)
+    metrics, _ = _scored(ev, n=5)
+    host = objective_cost_host(metrics, Objective(), ev.norm)
+    assert host.dtype == np.float64
+    # total_cost delegates to the objective layer; the *independent*
+    # reference is the original numpy component formula (cost_components,
+    # untouched by the objective layer) summed in the canonical grouped
+    # order (all lat, all inv-thr, area).  Note: the pre-objective
+    # total_cost summed components interleaved per traffic type, which
+    # differs from the grouped order in the last float64 ulp.
+    comp = cost_components(metrics, arch, ev.norm)
+    ref = (sum(comp[f"lat_{t}"] for t in TRAFFIC_TYPES)
+           + sum(comp[f"thr_{t}"] for t in TRAFFIC_TYPES) + comp["area"])
+    assert np.array_equal(host, ref)
+    assert np.array_equal(total_cost(metrics, arch, ev.norm), ref)
+    # the deprecated ArchSpec.w_* alias constructs exactly this objective
+    assert Objective.from_arch(arch) == Objective()
+    assert arch.default_objective() == Objective()
+
+
+@pytest.mark.parametrize("arch_name", ["homog32", "hetero32"])
+def test_device_cost_agrees_with_host_incl_penalty_terms(arch_name):
+    obj = Objective(terms=(
+        "lat", "inv-thr", "area",
+        {"name": "link-length-cap", "weight": 2.0, "params": {"cap_mm": 1.5}},
+        {"name": "node-degree", "weight": 0.25, "params": {"max_degree": 2}}))
+    ev, _ = _evaluator(arch_name, config="placeit", objective=obj)
+    metrics, batch = _scored(ev)
+    assert "cost" in metrics                 # cost computed in-scorer
+    host = objective_cost_host(metrics, obj, ev.norm, batch=batch)
+    np.testing.assert_allclose(ev.costs_from(metrics), host,
+                               rtol=1e-4, atol=1e-5)
+    # on hetero placements the penalties actually bite
+    if arch_name == "hetero32":
+        base = objective_cost_host(metrics, Objective(), ev.norm)
+        assert (host - base).max() > 0
+
+
+def test_penalty_terms_hand_computed():
+    # 4 PHYs, two undirected links: 0-1 (len 2.5) and 1-2 (len 0.5).
+    edges = np.array([[[0, 1], [1, 0], [1, 2], [2, 1], [0, 0], [0, 0]]],
+                     np.int32)
+    mask = np.array([[1, 1, 1, 1, 0, 0]], bool)
+    elen = np.array([[2.5, 2.5, 0.5, 0.5, 9.9, 9.9]], np.float32)
+    batch = {"edges": edges, "edge_mask": mask, "edge_len": elen}
+    metrics = {"area": np.array([1.0])}
+    obj = Objective(terms=(
+        {"name": "link-length-cap", "params": {"cap_mm": 1.0}},
+        {"name": "node-degree", "params": {"max_degree": 1}}))
+    n = CostNormalizers.from_samples(
+        {**{f"lat_{t}": np.array([1.0]) for t in TRAFFIC_TYPES},
+         **{f"thr_{t}": np.array([1.0]) for t in TRAFFIC_TYPES},
+         "area": np.array([1.0])})
+    cost = objective_cost_host(metrics, obj, n, batch=batch)
+    # link overage: (2.5-1.0) + 0 = 1.5; degree overage: node 1 has
+    # degree 2 -> 1 over the cap.
+    np.testing.assert_allclose(cost, [1.5 + 1.0])
+
+
+# ---------------------------------------------------------------------------
+# Trace-derived mixes.
+# ---------------------------------------------------------------------------
+
+def test_trace_mix_shares_and_weights():
+    tm = TraceMix()
+    for fw in (True, False):
+        shares = tm.class_shares(flit_weighted=fw)
+        assert abs(sum(shares.values()) - 1.0) < 1e-12
+        assert shares["c2m"] == max(shares.values())   # §V-B: 80-95% C2M
+        assert shares["c2i"] == 0.0                    # no direct C<->I
+    mix = TrafficMix.from_trace_mix(tm)
+    assert mix.lat == mix.thr
+    assert abs(sum(mix.lat) - 4.2) < 1e-9              # paper-sum scaling
+    # it is a valid config value end to end
+    cfg = ExperimentConfig(arch="homog32", objective=Objective(mix=mix))
+    assert ExperimentConfig.from_json(cfg.to_json()) == cfg
+
+
+def test_trace_mix_shares_match_generated_trace():
+    from repro.core.baseline import MeshBaseline
+    from repro.core.netsim import ChipletNet
+    from repro.core.traces import TraceRegion, generate_trace, trace_stats
+    arch = paper_arch("homog32", "baseline")
+    _, geo, links = MeshBaseline(arch).build()
+    net = ChipletNet.from_links(arch, geo, links)
+    pk = generate_trace(net, (TraceRegion(4000, 40_000),), seed=3)
+    stats = trace_stats(pk, net)
+    want = TraceMix().class_shares(flit_weighted=False)
+    got = {"c2c": stats["c2c"], "c2m": stats["c2m"] + stats["m2c"],
+           "m2i": stats["m2i"] + stats["i2m"]}
+    for k, v in got.items():
+        assert abs(v - want[k]) < 0.03, (k, v, want[k])
+
+
+# ---------------------------------------------------------------------------
+# Normalizer policies + degenerate-normalizer flag.
+# ---------------------------------------------------------------------------
+
+def _norm_metrics(lat=10.0):
+    m = {f"lat_{t}": np.array([lat, lat * 3]) for t in TRAFFIC_TYPES}
+    m |= {f"thr_{t}": np.array([0.25, 1.0]) for t in TRAFFIC_TYPES}
+    m["area"] = np.array([100.0, 300.0])
+    return m
+
+
+def test_normalizer_policies():
+    m = _norm_metrics()
+    assert CostNormalizers.from_samples(m).lat["c2c"] == 20.0
+    assert CostNormalizers.from_samples(m, policy="median").area == 200.0
+    ones = CostNormalizers.from_samples(m, policy="ones")
+    assert ones.lat["c2c"] == ones.inv_thr["m2i"] == ones.area == 1.0
+    ev, _ = _evaluator("homog32",
+                       objective=Objective(normalizer="ones"), n=4)
+    assert np.array_equal(ev.norm_vec, np.ones(NORM_DIM, np.float32))
+
+
+def test_degenerate_norms_warn_and_flag():
+    m = _norm_metrics(lat=1.0e9)         # every sample disconnected
+    with pytest.warns(RuntimeWarning, match="disconnected"):
+        n = CostNormalizers.from_samples(m)
+    assert n.degenerate == TRAFFIC_TYPES
+    assert n.lat["c2m"] == 1.0 and n.inv_thr["c2m"] == 1.0
+    # healthy draws leave the flag empty
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert CostNormalizers.from_samples(_norm_metrics()).degenerate == ()
+
+
+def test_degenerate_norms_propagate_to_run_records(monkeypatch):
+    orig = CostNormalizers.from_samples
+
+    def degenerate(metrics, policy="mean"):
+        n = orig(metrics, policy)
+        n.degenerate = ("c2i",)
+        return n
+
+    monkeypatch.setattr(CostNormalizers, "from_samples",
+                        staticmethod(degenerate))
+    cfg = ExperimentConfig(arch="homog32", algorithms=("br",),
+                           budget=Budget(evals=4), norm_samples=4, chunk=4)
+    (rec,) = run_experiment(cfg)
+    assert rec.degenerate_norms == ("c2i",)
+    (rec,) = run_sweep([cfg]).records
+    assert rec.degenerate_norms == ("c2i",)
+
+
+# ---------------------------------------------------------------------------
+# In-scorer ranking + objective-keyed scorer sharing.
+# ---------------------------------------------------------------------------
+
+def test_topk_matches_host_order():
+    ev, _ = _evaluator("homog32")
+    rng = np.random.default_rng(5)
+    _, graphs = ev.generate_valid(ev.rep.random, rng, 9)
+    costs, metrics = ev.costs(graphs)
+    ck, ik = ev.topk(graphs, k=4)
+    order = np.argsort(costs, kind="stable")[:4]
+    np.testing.assert_allclose(ck, costs[order], rtol=1e-6)
+    assert ck[0] == costs[ik[0]] and set(ik) == set(order)
+
+
+def test_scorer_cache_keys_on_objective():
+    clear_scorer_cache()
+    base = dict(arch="homog32", algorithms=("br",), budget=Budget(evals=4),
+                norm_samples=4, chunk=4)
+    same = [ExperimentConfig(**base, seed=s) for s in (0, 1)]
+    res = run_sweep(same)
+    assert res.stats.scorers_built == 1         # shared across seeds
+    other = ExperimentConfig(**base, objective=Objective(
+        mix=TrafficMix(lat=(1, 1, 1, 1), thr=(1, 1, 1, 1))))
+    res2 = run_sweep([same[0], other])
+    stats = scorer_cache_stats()
+    assert res2.stats.scorers_built == 1        # new objective -> new scorer
+    assert stats["misses"] == 2
+    # different objectives never share a stacked scoring group
+    assert res2.stats.stacked_groups == 0
+
+
+def test_termspec_accepts_string_and_bool_params():
+    t = TermSpec("lat", params={"mode": "soft", "hard": True, "cap": 2})
+    assert t.param_dict() == {"mode": "soft", "hard": True, "cap": 2.0}
+    assert TermSpec.from_dict(t.to_dict()) == t and hash(t) == hash(t)
+    with pytest.raises(TypeError, match="JSON scalars"):
+        TermSpec("lat", params={"bad": [1, 2]})
+
+
+def test_topk_respects_hetero_connectivity_override():
+    # A hetero device batch carries its own Borůvka-component `connected`
+    # (stricter than the scorer's FW reachability); topk must never rank a
+    # host-rule-invalid row first.
+    ev, rep = _evaluator("hetero32")
+    from repro.core.optimize import DevicePipeline
+    pipe = DevicePipeline(ev)
+    import jax
+    o, r, batch = pipe._gen(jax.random.PRNGKey(0), 8)
+    batch = {k: np.asarray(v) for k, v in dict(batch).items()}
+    conn = batch["connected"].astype(bool).copy()
+    costs = ev.costs_from(ev.score_batch(
+        {k: v for k, v in batch.items() if k not in ("connected",
+                                                     "overflow")}))
+    # force the cheapest row invalid and check it is demoted
+    cheapest = int(np.argmin(np.where(conn, costs, np.inf)))
+    conn2 = conn.copy()
+    conn2[cheapest] = False
+    batch["connected"] = conn2
+    ck, ik = ev.topk(batch, k=3)
+    assert cheapest not in set(int(i) for i in ik if np.isfinite(ck[0]))
+    valid_sorted = np.argsort(np.where(conn2, costs, np.inf))[:3]
+    assert int(ik[0]) == int(valid_sorted[0])
+
+
+def test_drive_stacked_rejects_mismatched_request_keys():
+    from repro.core.optimize import drive_stacked
+    ev, rep = _evaluator("homog32")
+    rng = np.random.default_rng(0)
+    _, graphs = ev.generate_valid(ev.rep.random, rng, 2)
+
+    def gen_graphs():
+        yield graphs
+        return None
+
+    def gen_bogus():
+        from repro.core.topology import stack_graphs
+        b = stack_graphs(graphs)
+        b["extra_key"] = np.zeros(2)
+        yield b
+        return None
+
+    with pytest.raises(ValueError, match="disagree on batch keys"):
+        drive_stacked([(gen_graphs(), ev), (gen_bogus(), ev)])
