@@ -89,7 +89,7 @@ def _host_prep_rate(rep, parents, n: int) -> float:
 
 def _device_prep_rate(rep, parents, n: int) -> float:
     """One fused merge_batch -> mutate_batch -> build call for n children."""
-    _, _, _gen, _mut, _child = DevicePipeline._stages(rep)
+    _, _, _gen, _mut, _child, _ = DevicePipeline._stages(rep)
     rng = np.random.default_rng(1)
     idx = rng.integers(len(parents), size=(n, 2))
     ta = np.stack([parents[a][0] for a, _ in idx])
@@ -166,7 +166,7 @@ def _hetero_prep_rates(arch_name: str, n: int) -> tuple[float, float]:
         best = min(best, time.perf_counter() - t0)
     host = n / best
 
-    _, _, _gen, _mut, _child = DevicePipeline._stages(rep)
+    _, _, _gen, _mut, _child, _ = DevicePipeline._stages(rep)
     idx = rng.integers(len(parents), size=(n, 2))
     oa = np.stack([parents[a][0] for a, _ in idx])
     ra = np.stack([parents[a][1] for a, _ in idx])

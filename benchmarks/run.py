@@ -3,15 +3,19 @@
   PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME]
 
 Emits ``BENCH,name,value,derived`` CSV lines and JSON artifacts under
-artifacts/bench/; each module's artifact is additionally copied to
+artifacts/bench/; each module's artifact is additionally *merged* into
 ``BENCH_<name>.json`` at the repo root so the perf trajectory is versioned
-alongside the code (artifacts/ is transient).  Quick mode targets CI
-budgets; --full approaches the paper's budgets.
+alongside the code (artifacts/ is transient).  Merging is section-wise
+(recursive on dict values): a run that only exercises a subset of a
+module's sections — quick mode skips expensive ones — updates those keys
+and preserves the rest, instead of churning the whole versioned file.
+Quick mode targets CI budgets; --full approaches the paper's budgets.
 """
 from __future__ import annotations
 
 import argparse
 import glob
+import json
 import os
 import shutil
 import time
@@ -24,6 +28,8 @@ MODULES = [
     ("table5_rate", "paper Table V: placements/s + §VII-E area"),
     ("pipeline_throughput", "beyond-paper: device-resident pipeline vs "
                             "host loop (PR 2)"),
+    ("pareto_frontier", "beyond-paper: device Pareto fronts + stacked "
+                        "scalarization grids (PR 5)"),
     ("kernels", "kernel micro-benches"),
     ("bridge_roofline", "beyond-paper: bridge co-design + roofline"),
 ]
@@ -37,16 +43,45 @@ def _snapshot() -> dict[str, float]:
             for p in glob.glob(os.path.join(ARTIFACT_DIR, "*.json"))}
 
 
+def _merge(old, new):
+    """Section-wise merge: new keys win, dict values merge recursively,
+    keys only present in ``old`` survive (partial runs must not drop the
+    sections they skipped)."""
+    out = dict(old)
+    for k, v in new.items():
+        if isinstance(v, dict) and isinstance(out.get(k), dict):
+            out[k] = _merge(out[k], v)
+        else:
+            out[k] = v
+    return out
+
+
 def promote_artifacts(before: dict[str, float]) -> list[str]:
-    """Copy artifacts written/updated since ``before`` to the repo root as
-    ``BENCH_<stem>.json`` (the versioned perf trajectory)."""
+    """Merge artifacts written/updated since ``before`` into the repo-root
+    ``BENCH_<stem>.json`` (the versioned perf trajectory).  Non-dict or
+    unreadable JSON falls back to a plain copy."""
     promoted = []
     for p in glob.glob(os.path.join(ARTIFACT_DIR, "*.json")):
         if p in before and os.path.getmtime(p) <= before[p]:
             continue
         stem = os.path.splitext(os.path.basename(p))[0]
         dst = f"BENCH_{stem}.json"
-        shutil.copyfile(p, dst)
+        merged = None
+        if os.path.exists(dst):
+            try:
+                with open(p) as f:
+                    new = json.load(f)
+                with open(dst) as f:
+                    old = json.load(f)
+                if isinstance(new, dict) and isinstance(old, dict):
+                    merged = _merge(old, new)
+            except (json.JSONDecodeError, OSError):
+                merged = None
+        if merged is not None:
+            with open(dst, "w") as f:
+                json.dump(merged, f, indent=1)
+        else:
+            shutil.copyfile(p, dst)
         promoted.append(dst)
     return promoted
 

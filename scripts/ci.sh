@@ -1,12 +1,27 @@
 #!/usr/bin/env sh
-# Tier-1 CI: fast test pass (slow-marked tests excluded) + a quick
-# pipeline-throughput bench smoke (set CI_SKIP_BENCH=1 to skip it).
+# Tier-1 CI: fast test pass (slow-marked tests excluded) + quick bench
+# smokes for the pipeline-throughput and pareto-frontier benches (set
+# CI_SKIP_BENCH=1 to skip them).
 #   scripts/ci.sh [extra pytest args...]
+#
+# Coverage: when pytest-cov is installed, the test pass also reports
+# line coverage for src/repro/core/ and enforces CI_COV_FLOOR
+# (default 0 = report-only on this first PR; once a baseline number is
+# measured in an environment with pytest-cov, pin it via CI_COV_FLOOR).
+# The pinned container has no pytest-cov/coverage, so the flags are
+# gated on importability rather than assumed.
 set -eu
 cd "$(dirname "$0")/.."
+COV_ARGS=""
+if python -c "import pytest_cov" 2>/dev/null; then
+    COV_ARGS="--cov=repro.core --cov-report=term \
+--cov-fail-under=${CI_COV_FLOOR:-0}"
+fi
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
-    python -m pytest -q -m "not slow" "$@"
+    python -m pytest -q -m "not slow" $COV_ARGS "$@"
 if [ "${CI_SKIP_BENCH:-0}" != "1" ]; then
     PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
         python -m benchmarks.run --only pipeline
+    PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+        python -m benchmarks.run --only pareto
 fi

@@ -47,7 +47,7 @@ import numpy as np
 
 from .baseline import MeshBaseline
 from .chiplets import ArchSpec, paper_arch
-from .objective import Objective, TrafficMix
+from .objective import Objective, Schedule, TrafficMix
 from .optimize import (Evaluator, OptResult, best_random,
                        best_random_batched, best_random_batched_steps,
                        best_random_steps, drive_stacked, genetic_algorithm,
@@ -310,7 +310,7 @@ def make_rep(arch: ArchSpec, arch_name: str,
 
 # ---------------------------------------------------------------------------
 # Jitted-scorer cache: one compilation per (layout, chunk, backend,
-# objective).
+# objective *structure*).
 # ---------------------------------------------------------------------------
 
 _SCORER_CACHE: dict[tuple, Callable] = {}
@@ -322,10 +322,16 @@ def get_scorer(layout, *, chunk: int, backend: str,
     """Cached jitted batched scorer (with the compiled objective lowered
     in).  Two Evaluators over the same layout (e.g. sweep repetitions, or
     configs differing only in budget/seed) share one compiled function
-    instead of re-tracing; normalizers are a runtime argument, so
-    different normalizer draws share too."""
+    instead of re-tracing; normalizers and objective *weights* are runtime
+    arguments, so different normalizer draws — and objectives differing
+    only in traffic-mix / area / term weights, e.g. the scalarizations of
+    a Pareto grid — share too.  Only the term structure
+    (:meth:`Objective.structure_key`: names + params) forces a new
+    compilation.  Callers must pass their weights at call time
+    (``Evaluator`` always does); the baked-in defaults belong to whichever
+    objective compiled first."""
     objective = objective if objective is not None else Objective()
-    key = (layout, chunk, backend, objective)
+    key = (layout, chunk, backend, objective.structure_key())
     hit = key in _SCORER_CACHE
     _SCORER_STATS["hits" if hit else "misses"] += 1
     if not hit:
@@ -354,20 +360,26 @@ def clear_pipeline_cache() -> None:
 def make_evaluator(rep, arch: ArchSpec, *, rng: np.random.Generator,
                    norm_samples: int, chunk: int = 16,
                    backend: str = "fw-ref", fw_impl=None,
-                   objective: Objective | None = None) -> Evaluator:
+                   objective: Objective | None = None,
+                   schedule: Schedule | None = None,
+                   norm=None) -> Evaluator:
     """Evaluator wired to a named backend; raw ``fw_impl`` callables (the
     legacy hook) bypass the cache.  ``objective`` defaults to the default
     ``Objective`` built from the arch's (deprecated) ``w_*`` weights —
-    i.e. the paper formula for paper archs."""
+    i.e. the paper formula for paper archs.  ``schedule`` attaches
+    constraint-hardening weight ramps; ``norm`` re-uses an existing
+    normalizer draw (see :class:`repro.core.optimize.Evaluator`)."""
     objective = (objective if objective is not None
                  else Objective.from_arch(arch))
     if fw_impl is not None:
         return Evaluator(rep, arch, rng=rng, norm_samples=norm_samples,
-                         chunk=chunk, fw_impl=fw_impl, objective=objective)
+                         chunk=chunk, fw_impl=fw_impl, objective=objective,
+                         schedule=schedule, norm=norm)
     scorer = get_scorer(rep.layout, chunk=chunk, backend=backend,
                         objective=objective)
     return Evaluator(rep, arch, rng=rng, norm_samples=norm_samples,
-                     chunk=chunk, scorer=scorer, objective=objective)
+                     chunk=chunk, scorer=scorer, objective=objective,
+                     schedule=schedule, norm=norm)
 
 
 # ---------------------------------------------------------------------------
@@ -397,12 +409,19 @@ class ExperimentConfig:
     # Cost function (repro.core.objective); the default reproduces the
     # paper formula bit-for-bit, so old serialized configs load unchanged.
     objective: Objective = field(default_factory=Objective)
+    # Constraint-hardening weight ramps over each run's progress
+    # (repro.core.objective.Schedule); None = static weights.
+    schedule: Schedule | None = None
 
     def __post_init__(self):
         object.__setattr__(self, "algorithms", tuple(self.algorithms))
         if not isinstance(self.objective, Objective):
             object.__setattr__(self, "objective",
                               Objective.from_dict(self.objective))
+        if self.schedule is not None and \
+                not isinstance(self.schedule, Schedule):
+            object.__setattr__(self, "schedule",
+                              Schedule.from_dict(self.schedule))
         # Normalize overrides to typed params (validates algo names too).
         norm = {}
         for algo, ov in self.params.items():
@@ -446,6 +465,8 @@ class ExperimentConfig:
             "params": {a: dataclasses.asdict(p)
                        for a, p in self.params.items()},
             "objective": self.objective.to_dict(),
+            "schedule": (None if self.schedule is None
+                         else self.schedule.to_dict()),
         }
 
     @classmethod
@@ -519,7 +540,8 @@ def run_experiment(config: ExperimentConfig, *, fw_impl=None
         ev = make_evaluator(rep, arch, rng=rng,
                             norm_samples=config.norm_samples,
                             chunk=config.chunk, backend=config.backend,
-                            fw_impl=fw_impl, objective=config.objective)
+                            fw_impl=fw_impl, objective=config.objective,
+                            schedule=config.schedule)
         for entry in entries:
             t0 = time.monotonic()
             rng_a = np.random.default_rng(
@@ -572,10 +594,63 @@ class SweepStats:
 class SweepResult:
     runs: list[SweepRun]
     stats: SweepStats
+    # Per base-config Pareto fronts (repro.core.pareto.ParetoFront) when
+    # the sweep was launched from a SweepConfig with a pareto_grid.
+    fronts: list | None = None
 
     @property
     def records(self) -> list[RunRecord]:
         return [r for run in self.runs for r in run.records]
+
+
+@dataclass(frozen=True)
+class SweepConfig:
+    """A whole sweep as one serializable value.
+
+    ``configs`` are the base experiments.  With a ``pareto_grid``
+    (:class:`repro.core.pareto.ParetoGridSpec`), each base config is
+    expanded into one config per grid scalarization (same term structure,
+    different runtime weights — they share one jitted scorer and stack in
+    lockstep), and ``run_sweep`` attaches one
+    :class:`repro.core.pareto.ParetoFront` per base config to
+    ``SweepResult.fronts``.
+    """
+
+    configs: tuple = ()
+    pareto_grid: object | None = None      # pareto.ParetoGridSpec
+    fold_repetitions: bool = True
+    stack_scoring: bool = True
+
+    def __post_init__(self):
+        object.__setattr__(self, "configs", tuple(
+            c if isinstance(c, ExperimentConfig)
+            else ExperimentConfig.from_dict(c) for c in self.configs))
+        if self.pareto_grid is not None:
+            from .pareto import ParetoGridSpec
+            if not isinstance(self.pareto_grid, ParetoGridSpec):
+                object.__setattr__(self, "pareto_grid",
+                                  ParetoGridSpec.from_dict(self.pareto_grid))
+
+    def to_dict(self) -> dict:
+        return {"configs": [c.to_dict() for c in self.configs],
+                "pareto_grid": (None if self.pareto_grid is None
+                                else self.pareto_grid.to_dict()),
+                "fold_repetitions": self.fold_repetitions,
+                "stack_scoring": self.stack_scoring}
+
+    @classmethod
+    def from_dict(cls, d: Mapping) -> "SweepConfig":
+        unknown = set(d) - {f.name for f in dataclasses.fields(cls)}
+        if unknown:
+            raise ValueError(f"unknown SweepConfig keys: {sorted(unknown)}")
+        return cls(**dict(d))
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_dict(), indent=1)
+
+    @classmethod
+    def from_json(cls, s: str) -> "SweepConfig":
+        return cls.from_dict(json.loads(s))
 
 
 # Step-generator factories for optimizers that support lockstep stacked
@@ -638,6 +713,11 @@ def run_sweep(configs, *, fold_repetitions: bool = True,
               stack_scoring: bool = True) -> SweepResult:
     """Run many configs, amortizing compilation and normalization.
 
+    ``configs`` may also be a :class:`SweepConfig`; with a ``pareto_grid``
+    the base configs are expanded per grid scalarization and per-config
+    Pareto fronts are attached to ``SweepResult.fronts``
+    (``repro.core.pareto``).
+
     Unlike per-config :func:`run_experiment` (which re-draws normalizers
     per repetition for legacy fidelity), a sweep shares one Evaluator per
     (arch, config, seed, norm_samples, chunk, backend, mutation_mode) and
@@ -653,11 +733,13 @@ def run_sweep(configs, *, fold_repetitions: bool = True,
     With ``stack_scoring`` (default), runs of *any* registered-stackable
     optimizer — BR/GA/SA host loops and the device-resident ``*-batched``
     drivers — from configs that share a jitted scorer (same layout, chunk,
-    backend and objective — e.g. GA populations from configs differing
-    only in seed or hyper-parameters) execute in lockstep with their
-    per-round scoring requests concatenated into a single vmapped call
-    (:func:`repro.core.optimize.drive_stacked`); per-row normalizer
-    vectors keep each run's in-scorer costs exact.
+    backend and objective *structure*; weights are runtime, so a Pareto
+    grid of scalarizations stacks — e.g. GA populations from configs
+    differing only in seed, hyper-parameters or objective weights)
+    execute in lockstep with their per-round scoring requests
+    concatenated into a single vmapped call
+    (:func:`repro.core.optimize.drive_stacked`); per-row normalizer and
+    weight vectors keep each run's in-scorer costs exact.
     Results are bit-for-bit identical to unstacked execution; only the
     number of device dispatches changes (``stats.score_calls``).  Runs
     with a wall-clock budget are excluded (interleaving would consume
@@ -671,21 +753,42 @@ def run_sweep(configs, *, fold_repetitions: bool = True,
     number of placements generated *by that run* (a per-call delta), not
     the legacy cumulative counter.
     """
+    if isinstance(configs, SweepConfig):
+        sc = configs
+        if sc.pareto_grid is not None:
+            from .pareto import run_pareto_sweep
+            return run_pareto_sweep(
+                sc.configs, sc.pareto_grid,
+                fold_repetitions=sc.fold_repetitions,
+                stack_scoring=sc.stack_scoring)
+        return run_sweep(sc.configs, fold_repetitions=sc.fold_repetitions,
+                         stack_scoring=sc.stack_scoring)
     t0 = time.monotonic()
     miss0 = _SCORER_STATS["misses"]
+    # Normalizer draws depend only on (arch, config, seed, samples, chunk,
+    # backend, mutation_mode, policy) — never on the objective's terms or
+    # weights — so evaluators for different scalarizations of one base
+    # config (e.g. a Pareto grid) share one draw instead of re-generating
+    # norm_samples placements each.
+    norm_cache: dict[tuple, Evaluator] = {}
     ev_cache: dict[tuple, Evaluator] = {}
     units: list[_SweepUnit] = []
     for cfg_i, cfg in enumerate(configs):
         arch = paper_arch(cfg.arch, cfg.config)
-        key = (cfg.arch, cfg.config, cfg.seed, cfg.norm_samples, cfg.chunk,
-               cfg.backend, cfg.mutation_mode, cfg.objective)
+        nkey = (cfg.arch, cfg.config, cfg.seed, cfg.norm_samples, cfg.chunk,
+                cfg.backend, cfg.mutation_mode, cfg.objective.normalizer)
+        key = nkey + (cfg.objective, cfg.schedule)
         if key not in ev_cache:
             rng = np.random.default_rng(cfg.seed)
             rep = make_rep(arch, cfg.arch, cfg.mutation_mode)
+            base = norm_cache.get(nkey)
             ev_cache[key] = make_evaluator(
                 rep, arch, rng=rng, norm_samples=cfg.norm_samples,
                 chunk=cfg.chunk, backend=cfg.backend,
-                objective=cfg.objective)
+                objective=cfg.objective, schedule=cfg.schedule,
+                norm=None if base is None else base.norm)
+            if base is None:
+                norm_cache[nkey] = ev_cache[key]
         ev = ev_cache[key]
         for algo in cfg.algorithms:
             entry = OPTIMIZERS.get(algo)
@@ -744,7 +847,7 @@ def run_sweep(configs, *, fold_repetitions: bool = True,
                       u.seconds, degenerate_norms=u.ev.degenerate_norms))
     stats = SweepStats(
         scorers_built=_SCORER_STATS["misses"] - miss0,
-        evaluators_built=len(ev_cache),
+        evaluators_built=len(norm_cache),
         n_evaluated=sum(r.result.n_evaluated
                         for run in runs for r in run.records),
         seconds=time.monotonic() - t0,

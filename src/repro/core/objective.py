@@ -21,7 +21,17 @@ first-class, serializable configuration instead of weights hard-wired into
   selection, see ``proxies.make_ranker``) happens on device.  Normalizers
   enter as a *runtime vector* (:func:`norms_vec`), not trace-time
   constants, so evaluators with different normalizer draws share one
-  compiled scorer.
+  compiled scorer.  The objective *weights* — traffic-mix, ``w_area`` and
+  per-term weights — are likewise a runtime vector
+  (:func:`weights_vec`), so a whole grid of scalarizations (Pareto
+  sweeps, ``repro.core.pareto``) and weight ramps across a run
+  (:class:`Schedule`) share a single compiled scorer; only the term
+  *structure* (:meth:`Objective.structure_key` — names and params) is
+  trace-time.
+* :class:`Schedule` — constraint-hardening ramps: per-term weight scale
+  factors (``linear | cosine | step``, from the
+  ``@register_schedule_ramp`` registry) applied across optimizer progress
+  without retracing.
 * :func:`objective_cost_host` — the float64 host evaluation used for
   reporting and equivalence tests; ``cost.total_cost`` delegates here.
 
@@ -29,7 +39,10 @@ Term implementations see a per-placement ``sample`` dict: the nine metric
 scalars (``lat_*`` / ``thr_*`` / ``area``) plus the graph arrays
 (``edges`` [E,2], ``edge_mask`` [E], ``edge_len`` [E] in mm) and the
 static PHY count ``Vp``.  ``norms`` is a dict of the nine normalizer
-scalars (``lat_*`` / ``inv_thr_*`` / ``area``).
+scalars (``lat_*`` / ``inv_thr_*`` / ``area``) *plus* the runtime weight
+scalars ``w_lat_*`` / ``w_thr_*`` / ``w_area`` — terms must read mix
+weights from there (not from ``objective.mix``, which is only the
+compile-time default) so they stay correct under runtime weight vectors.
 """
 from __future__ import annotations
 
@@ -43,8 +56,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from .chiplets import TRAFFIC_TYPES, ArchSpec
-from .registries import (OBJECTIVE_TERMS, ObjectiveTermEntry,
-                         register_objective_term)
+from .registries import (OBJECTIVE_TERMS, SCHEDULE_RAMPS, ObjectiveTermEntry,
+                         register_objective_term, register_schedule_ramp)
 
 _EPS = 1.0e-6
 
@@ -53,6 +66,14 @@ _EPS = 1.0e-6
 NORM_SLOTS = tuple([f"lat_{t}" for t in TRAFFIC_TYPES]
                    + [f"inv_thr_{t}" for t in TRAFFIC_TYPES] + ["area"])
 NORM_DIM = len(NORM_SLOTS)
+
+# Weight vector layout: the fixed slots shared by every objective, then one
+# weight per term.  Like the normalizers, this enters the jitted scorer as
+# a runtime argument ([W_FIXED + n_terms] or per-row [P, ...]), so Pareto
+# weight grids and schedule ramps never retrace.
+WEIGHT_SLOTS = tuple([f"w_lat_{t}" for t in TRAFFIC_TYPES]
+                     + [f"w_thr_{t}" for t in TRAFFIC_TYPES] + ["w_area"])
+W_FIXED = len(WEIGHT_SLOTS)
 
 NORMALIZER_POLICIES = ("mean", "median", "ones")
 
@@ -67,12 +88,49 @@ def norms_vec(norm) -> np.ndarray:
     return out
 
 
+def weights_vec(objective: "Objective") -> np.ndarray:
+    """Objective weights -> flat float32 vector: WEIGHT_SLOTS order (mix
+    lat, mix thr, w_area), then one per-term weight in term order."""
+    out = np.empty(W_FIXED + len(objective.terms), np.float32)
+    out[0:4] = objective.mix.lat
+    out[4:8] = objective.mix.thr
+    out[8] = objective.w_area
+    for j, t in enumerate(objective.terms):
+        out[W_FIXED + j] = t.weight
+    return out
+
+
+def weight_dim(objective: "Objective") -> int:
+    return W_FIXED + len(objective.terms)
+
+
 def _norms_dict_from_row(row):
     d = {}
     for i, t in enumerate(TRAFFIC_TYPES):
         d[f"lat_{t}"] = row[i]
         d[f"inv_thr_{t}"] = row[4 + i]
     d["area"] = row[8]
+    return d
+
+
+def _mix_weights_from_row(row):
+    """The fixed weight slots of a runtime weight vector, keyed like the
+    entries term implementations read from their ``norms`` mapping."""
+    d = {}
+    for i, t in enumerate(TRAFFIC_TYPES):
+        d[f"w_lat_{t}"] = row[i]
+        d[f"w_thr_{t}"] = row[4 + i]
+    d["w_area"] = row[8]
+    return d
+
+
+def _mix_weights_static(objective: "Objective"):
+    """Same mapping, from the objective's own (python-float) weights."""
+    d = {}
+    for i, t in enumerate(TRAFFIC_TYPES):
+        d[f"w_lat_{t}"] = objective.mix.lat[i]
+        d[f"w_thr_{t}"] = objective.mix.thr[i]
+    d["w_area"] = objective.w_area
     return d
 
 
@@ -220,6 +278,17 @@ class Objective:
     def with_terms(self, *extra: TermSpec) -> "Objective":
         return dataclasses.replace(self, terms=self.terms + tuple(extra))
 
+    def structure_key(self) -> tuple:
+        """The trace-time identity of this objective: term names + params.
+
+        All *weights* (traffic mix, ``w_area``, per-term) are runtime
+        vector entries (:func:`weights_vec`), so objectives that differ
+        only in weights share one compiled scorer — this key (not the full
+        objective) keys the jitted-scorer cache and the sweep's stacked-
+        scoring groups.
+        """
+        return tuple((t.name, t.params) for t in self.terms)
+
     # -- serialization ----------------------------------------------------
     def to_dict(self) -> dict:
         return {"mix": self.mix.to_dict(), "w_area": self.w_area,
@@ -245,12 +314,17 @@ class Objective:
 # Built-in terms.  Device fns are per-placement jnp (traced inside the
 # scorer's vmap); host fns are batched float64 numpy whose accumulation
 # order matches the legacy ``cost.cost_components`` formula exactly.
+# Traffic-mix / area weights are read from the ``norms`` mapping
+# (``w_lat_*`` / ``w_thr_*`` / ``w_area``), which carries either the
+# runtime weight-vector entries or the objective's own python floats —
+# never from ``obj.mix`` directly, which would freeze them at trace time.
 # ---------------------------------------------------------------------------
 
 def _lat_host(metrics, batch, norms, obj, params):
     acc = None
     for i, t in enumerate(TRAFFIC_TYPES):
-        v = (obj.mix.lat[i] * np.asarray(metrics[f"lat_{t}"], np.float64)
+        v = (norms[f"w_lat_{t}"] * np.asarray(metrics[f"lat_{t}"],
+                                              np.float64)
              / max(norms[f"lat_{t}"], _EPS))
         acc = v if acc is None else acc + v
     return acc
@@ -261,7 +335,7 @@ def _lat(sample, norms, obj, params):
     """Normalized mean shortest-path latency, weighted per traffic type."""
     acc = 0.0
     for i, t in enumerate(TRAFFIC_TYPES):
-        acc = acc + (obj.mix.lat[i] * sample[f"lat_{t}"]
+        acc = acc + (norms[f"w_lat_{t}"] * sample[f"lat_{t}"]
                      / jnp.maximum(norms[f"lat_{t}"], _EPS))
     return acc
 
@@ -269,7 +343,7 @@ def _lat(sample, norms, obj, params):
 def _inv_thr_host(metrics, batch, norms, obj, params):
     acc = None
     for i, t in enumerate(TRAFFIC_TYPES):
-        v = (obj.mix.thr[i]
+        v = (norms[f"w_thr_{t}"]
              * (1.0 / np.maximum(np.asarray(metrics[f"thr_{t}"],
                                             np.float64), _EPS))
              / max(norms[f"inv_thr_{t}"], _EPS))
@@ -282,21 +356,22 @@ def _inv_thr(sample, norms, obj, params):
     """Normalized inverse saturation throughput ("lower is better")."""
     acc = 0.0
     for i, t in enumerate(TRAFFIC_TYPES):
-        acc = acc + (obj.mix.thr[i]
+        acc = acc + (norms[f"w_thr_{t}"]
                      / jnp.maximum(sample[f"thr_{t}"], _EPS)
                      / jnp.maximum(norms[f"inv_thr_{t}"], _EPS))
     return acc
 
 
 def _area_host(metrics, batch, norms, obj, params):
-    return (obj.w_area * np.asarray(metrics["area"], np.float64)
+    return (norms["w_area"] * np.asarray(metrics["area"], np.float64)
             / max(norms["area"], _EPS))
 
 
 @register_objective_term("area", host_fn=_area_host)
 def _area(sample, norms, obj, params):
     """Normalized enclosing-rectangle area (§V-A get_area)."""
-    return obj.w_area * sample["area"] / jnp.maximum(norms["area"], _EPS)
+    return (norms["w_area"] * sample["area"]
+            / jnp.maximum(norms["area"], _EPS))
 
 
 def _link_len_host(metrics, batch, norms, obj, params):
@@ -347,21 +422,38 @@ def _node_degree(sample, norms, obj, params):
 class CompiledObjective:
     """An :class:`Objective` resolved against the term registry.
 
-    ``cost_one(sample, norms_row)`` is the per-placement jnp cost — pure,
-    vmappable, with the normalizer vector as a runtime argument so one
-    compiled scorer serves every normalizer draw (and, stacked, per-row
-    norms from different runs in one call).
+    ``cost_one(sample, norms_row[, weights_row])`` is the per-placement
+    jnp cost — pure, vmappable, with the normalizer vector (and optionally
+    the weight vector, see :func:`weights_vec`) as runtime arguments so
+    one compiled scorer serves every normalizer draw, every weight
+    scalarization of the same term structure, and — stacked — per-row
+    norms/weights from different runs in one call.  ``term_values``
+    returns the weighted per-term costs individually (the columns of a
+    Pareto cost matrix); ``cost_one`` is their sequential sum.
     """
 
     objective: Objective
     entries: tuple
 
-    def cost_one(self, sample, norms_row):
+    def term_values(self, sample, norms_row, weights_row=None):
+        """Weighted per-term jnp scalars, in term order."""
         norms = _norms_dict_from_row(norms_row)
+        if weights_row is None:
+            norms.update(_mix_weights_static(self.objective))
+            tw = [spec.weight for spec in self.objective.terms]
+        else:
+            norms.update(_mix_weights_from_row(weights_row))
+            tw = [weights_row[W_FIXED + j]
+                  for j in range(len(self.objective.terms))]
+        return [tw[j] * entry.fn(sample, norms, self.objective,
+                                 spec.param_dict())
+                for j, (spec, entry) in enumerate(
+                    zip(self.objective.terms, self.entries))]
+
+    def cost_one(self, sample, norms_row, weights_row=None):
         total = jnp.float32(0.0)
-        for spec, entry in zip(self.objective.terms, self.entries):
-            total = total + spec.weight * entry.fn(
-                sample, norms, self.objective, spec.param_dict())
+        for v in self.term_values(sample, norms_row, weights_row):
+            total = total + v
         return total
 
 
@@ -376,12 +468,13 @@ def compile_objective(objective: Objective, layout=None) -> CompiledObjective:
 # Host evaluation (reporting, legacy total_cost, device-agreement tests).
 # ---------------------------------------------------------------------------
 
-def _host_norms(norm) -> dict:
+def _host_norms(norm, objective: Objective) -> dict:
     d = {}
     for t in TRAFFIC_TYPES:
         d[f"lat_{t}"] = norm.lat[t]
         d[f"inv_thr_{t}"] = norm.inv_thr[t]
     d["area"] = norm.area
+    d.update(_mix_weights_static(objective))
     return d
 
 
@@ -390,7 +483,8 @@ def _host_fallback(entry: ObjectiveTermEntry, objective, spec, metrics,
     """vmap the device term over host arrays (float32) when no dedicated
     host implementation exists."""
     sample = {k: jnp.asarray(np.asarray(v))
-              for k, v in metrics.items() if k not in ("cost", "connected")}
+              for k, v in metrics.items()
+              if k not in ("cost", "connected", "overflow")}
     if batch is not None:
         for k in ("edges", "edge_mask", "edge_len"):
             if k in batch:
@@ -402,9 +496,10 @@ def _host_fallback(entry: ObjectiveTermEntry, objective, spec, metrics,
             vp = int(np.asarray(batch["edges"]).max()) + 1
     row = jnp.asarray(norms_vec(norm))
     params = spec.param_dict()
+    statics = _mix_weights_static(objective)
     out = jax.vmap(lambda s: entry.fn(dict(s, Vp=vp or 0),
-                                      _norms_dict_from_row(row), objective,
-                                      params))(sample)
+                                      _norms_dict_from_row(row) | statics,
+                                      objective, params))(sample)
     return np.asarray(out, np.float64)
 
 
@@ -418,7 +513,7 @@ def objective_cost_host(metrics: dict, objective: Objective, norm, *,
     graph ``batch``; ``vp`` supplies the true ``layout.Vp`` to host-
     fallback terms that size per-PHY arrays."""
     cobj = compile_objective(objective)
-    norms = _host_norms(norm)
+    norms = _host_norms(norm, objective)
     total = None
     for spec, entry in zip(objective.terms, cobj.entries):
         if entry.host_fn is not None:
@@ -433,3 +528,149 @@ def objective_cost_host(metrics: dict, objective: Objective, norm, *,
         some = np.asarray(metrics["area"], np.float64)
         total = np.zeros_like(some)
     return total
+
+
+# ---------------------------------------------------------------------------
+# Constraint-hardening schedules: per-term weight scale ramps over a run.
+#
+# Because the objective weights are a *runtime* vector in the jitted scorer
+# (see weights_vec), ramping a penalty weight across optimizer generations
+# is just a different [W_FIXED + n_terms] vector per scoring request — no
+# retrace.  Ramp shapes come from the @register_schedule_ramp registry
+# (registries.SCHEDULE_RAMPS): fn(t, start, end, params) -> scale, with t
+# the run's progress fraction in [0, 1].
+# ---------------------------------------------------------------------------
+
+@register_schedule_ramp("linear")
+def _ramp_linear(t, start, end, params):
+    """start -> end, linearly in progress."""
+    return start + (end - start) * t
+
+
+@register_schedule_ramp("cosine")
+def _ramp_cosine(t, start, end, params):
+    """start -> end along a half cosine (slow start, slow finish)."""
+    return end + (start - end) * 0.5 * (1.0 + np.cos(np.pi * t))
+
+
+@register_schedule_ramp("step")
+def _ramp_step(t, start, end, params):
+    """start before progress ``at`` (default 0.5), end from there on."""
+    return end if t >= params.get("at", 0.5) else start
+
+
+@dataclass(frozen=True)
+class Ramp:
+    """One ramp: a registry kind plus start/end scales and params."""
+
+    kind: str = "linear"
+    start: float = 0.0
+    end: float = 1.0
+    params: tuple = ()              # sorted ((key, value), ...) pairs
+
+    def __post_init__(self):
+        p = self.params
+        items = p.items() if isinstance(p, Mapping) else p
+        object.__setattr__(self, "params", tuple(
+            sorted((str(k), float(v)) for k, v in items)))
+        object.__setattr__(self, "start", float(self.start))
+        object.__setattr__(self, "end", float(self.end))
+        SCHEDULE_RAMPS.get(self.kind)          # fail fast on unknown kinds
+
+    def scale_at(self, t: float) -> float:
+        t = min(max(float(t), 0.0), 1.0)
+        return float(SCHEDULE_RAMPS.get(self.kind)(
+            t, self.start, self.end, dict(self.params)))
+
+    def to_dict(self) -> dict:
+        return {"kind": self.kind, "start": self.start, "end": self.end,
+                "params": dict(self.params)}
+
+    @classmethod
+    def from_dict(cls, d) -> "Ramp":
+        if isinstance(d, Ramp):
+            return d
+        unknown = set(d) - {"kind", "start", "end", "params"}
+        if unknown:
+            raise ValueError(f"unknown Ramp keys: {sorted(unknown)}")
+        return cls(**dict(d))
+
+
+@dataclass(frozen=True)
+class Schedule:
+    """Per-term weight-scale ramps applied over a run's progress.
+
+    ``ramps`` maps objective term names to :class:`Ramp`s; at progress
+    ``t`` the term's runtime weight is ``spec.weight * ramp.scale_at(t)``.
+    Classic constraint hardening ramps a penalty term from 0 to full
+    strength (``Ramp("linear", start=0.0, end=1.0)``), letting the search
+    move through infeasible regions early and forcing feasibility late.
+    Hashable and JSON round-trippable like :class:`Objective`; validated
+    against the objective's terms when compiled (``compile_schedule``).
+    """
+
+    ramps: tuple = ()               # sorted ((term_name, Ramp), ...)
+
+    def __post_init__(self):
+        r = self.ramps
+        items = r.items() if isinstance(r, Mapping) else r
+        object.__setattr__(self, "ramps", tuple(sorted(
+            (str(k), Ramp.from_dict(v)) for k, v in items)))
+
+    def scales_at(self, t: float) -> dict:
+        return {name: ramp.scale_at(t) for name, ramp in self.ramps}
+
+    def to_dict(self) -> dict:
+        return {"ramps": {name: ramp.to_dict() for name, ramp in self.ramps}}
+
+    @classmethod
+    def from_dict(cls, d) -> "Schedule":
+        if isinstance(d, Schedule):
+            return d
+        unknown = set(d) - {"ramps"}
+        if unknown:
+            raise ValueError(f"unknown Schedule keys: {sorted(unknown)}")
+        return cls(**dict(d))
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_dict(), indent=1)
+
+    @classmethod
+    def from_json(cls, s: str) -> "Schedule":
+        return cls.from_dict(json.loads(s))
+
+
+class CompiledSchedule:
+    """A :class:`Schedule` bound to an objective's weight vector.
+
+    ``weights_at(t)`` returns the [W_FIXED + n_terms] float32 runtime
+    weight vector at progress ``t``: the objective's base weights with
+    each ramped term's weight slot scaled.  Rows for a whole trajectory
+    share the compiled scorer — weights are runtime, nothing retraces.
+    """
+
+    def __init__(self, schedule: Schedule, objective: Objective):
+        self.schedule = schedule
+        self.objective = objective
+        self._base = weights_vec(objective)
+        names = [t.name for t in objective.terms]
+        unknown = [n for n, _ in schedule.ramps if n not in names]
+        if unknown:
+            raise ValueError(
+                f"schedule ramps unknown objective term(s) {unknown}; "
+                f"objective has {names}")
+        self._slots = [(np.nonzero([n == name for n in names])[0] + W_FIXED,
+                        ramp) for name, ramp in schedule.ramps]
+
+    def weights_at(self, t: float) -> np.ndarray:
+        out = self._base.copy()
+        for slots, ramp in self._slots:
+            out[slots] = out[slots] * np.float32(ramp.scale_at(t))
+        return out
+
+
+def compile_schedule(schedule, objective: Objective) -> CompiledSchedule:
+    """Validate + bind a schedule (or its dict form) to an objective."""
+    return CompiledSchedule(Schedule.from_dict(schedule)
+                            if not isinstance(schedule, Schedule)
+                            else schedule, objective)

@@ -34,9 +34,15 @@ Two execution styles coexist:
 
 Cost evaluation is in-scorer: the Evaluator's jitted scorer carries the
 compiled :class:`repro.core.objective.Objective`, emits a per-placement
-``cost`` next to the metrics (normalizers enter as a runtime vector), and
-``Evaluator.topk`` ranks a candidate batch on device in the same call —
-there is no host-numpy cost loop on the hot path.
+``cost`` next to the metrics (normalizers *and objective weights* enter
+as runtime vectors), and ``Evaluator.topk`` ranks a candidate batch on
+device in the same call — there is no host-numpy cost loop on the hot
+path.  With a :class:`repro.core.objective.Schedule` attached to the
+Evaluator, every step generator tags its scoring requests with the
+ramped weight vector at the run's current progress (constraint
+hardening) and re-ranks its final pool under the final weights — all
+without retracing, since only the objective's term structure is
+trace-time.
 """
 from __future__ import annotations
 
@@ -49,8 +55,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from .cost import CostNormalizers
-from .objective import (NORM_DIM, Objective, norms_vec,
-                        objective_cost_host)
+from .objective import (NORM_DIM, Objective, compile_schedule, norms_vec,
+                        objective_cost_host, weights_vec)
 from .placement_hetero import HeteroRep
 from .placement_homog import HomogRep
 from .proxies import make_ranker, make_scorer
@@ -75,17 +81,31 @@ class Evaluator:
 
     ``objective`` defaults to the arch's (deprecated) ``w_*`` weights via
     :meth:`Objective.from_arch`.  When a pre-built ``scorer`` is passed it
-    must have been compiled with the *same* objective (``api.get_scorer``
-    keys its cache accordingly).
+    must have been compiled with the *same term structure*
+    (``Objective.structure_key``; ``api.get_scorer`` keys its cache
+    accordingly) — the objective's weights are always passed at call time
+    as the runtime weight vector, so objectives differing only in weights
+    share one compiled scorer.
+
+    ``schedule`` (an ``objective.Schedule``) attaches constraint-hardening
+    weight ramps: step generators ask :meth:`sched_weights` for the weight
+    vector at their current progress and tag their scoring requests with
+    it.  ``norm`` re-uses an existing ``CostNormalizers`` draw (sweeps
+    share draws across objectives whose normalizer inputs are identical)
+    instead of re-drawing ``norm_samples`` placements.
     """
 
     def __init__(self, rep, arch, *, rng: np.random.Generator,
                  norm_samples: int = 500, chunk: int = 16, fw_impl=None,
-                 scorer=None, objective: Objective | None = None):
+                 scorer=None, objective: Objective | None = None,
+                 schedule=None, norm: CostNormalizers | None = None):
         self.rep = rep
         self.arch = arch
         self.objective = (objective if objective is not None
                           else Objective.from_arch(arch))
+        self._weights_vec = weights_vec(self.objective)
+        self.schedule = (compile_schedule(schedule, self.objective)
+                         if schedule is not None else None)
         if scorer is not None:
             # Pre-built (usually cached) jitted scorer — see api.get_scorer.
             self.scorer = scorer
@@ -98,6 +118,10 @@ class Evaluator:
         self.n_score_calls = 0
         self._pipeline: "DevicePipeline | None" = None
         self._ranker = None
+        if norm is not None:
+            self.norm = norm
+            self._norm_vec = norms_vec(self.norm)
+            return
         # Norm-sample draws are scored before normalizers exist; the
         # device cost of those calls is computed against all-ones norms
         # and never consumed.
@@ -113,6 +137,19 @@ class Evaluator:
     def norm_vec(self) -> np.ndarray:
         """Normalizers as the scorer's runtime [NORM_DIM] vector."""
         return self._norm_vec
+
+    @property
+    def weights_vec(self) -> np.ndarray:
+        """Objective weights as the scorer's runtime weight vector."""
+        return self._weights_vec
+
+    def sched_weights(self, progress: float) -> np.ndarray | None:
+        """The schedule's weight vector at ``progress`` in [0, 1] (``None``
+        when no schedule is attached — requests then use the static
+        objective weights)."""
+        if self.schedule is None:
+            return None
+        return self.schedule.weights_at(progress)
 
     @property
     def degenerate_norms(self) -> tuple:
@@ -140,12 +177,15 @@ class Evaluator:
     def score(self, graphs: list[ScoreGraph]) -> dict:
         return self.score_batch(stack_graphs(graphs))
 
-    def score_batch(self, batch: dict, norms=None) -> dict:
+    def score_batch(self, batch: dict, norms=None, weights=None) -> dict:
         """Score pre-stacked (host or device) ScoreGraph arrays.  ``norms``
-        overrides the evaluator's normalizer vector (e.g. per-row norms in
-        stacked cross-run scoring)."""
+        / ``weights`` override the evaluator's normalizer / objective
+        weight vectors (e.g. per-row vectors in stacked cross-run scoring,
+        or a schedule's ramped weights)."""
         self.n_score_calls += 1
-        out = self.scorer(batch, self._norm_vec if norms is None else norms)
+        out = self.scorer(batch,
+                          self._norm_vec if norms is None else norms,
+                          self._weights_vec if weights is None else weights)
         return {k: np.asarray(v) for k, v in out.items()}
 
     def costs_from(self, metrics: dict) -> np.ndarray:
@@ -172,13 +212,15 @@ class Evaluator:
         self.n_score_calls += 1
         if self._ranker is None:
             self._ranker = make_ranker(self.scorer)
-        batch, gconn, _ = _request_parts(graphs_or_batch)
+        batch, gconn, _, wrow = _request_parts(graphs_or_batch)
         ovf = batch.pop("overflow", None)
         valid = None if gconn is None else np.asarray(gconn)
         if ovf is not None and np.asarray(ovf).any():
             ok = ~np.asarray(ovf)
             valid = ok if valid is None else valid & ok
-        c, i = self._ranker(batch, self._norm_vec, k=k, valid=valid)
+        c, i = self._ranker(batch, self._norm_vec, k=k, valid=valid,
+                            weights=self._weights_vec
+                            if wrow is None else wrow)
         return np.asarray(c), np.asarray(i)
 
     def pipeline(self) -> "DevicePipeline":
@@ -196,25 +238,52 @@ def _metrics_row(metrics: dict, i: int) -> dict:
 # Step-generator execution.  Optimizers yield *scoring requests* — either a
 # list of host ScoreGraphs or a pre-stacked (device) batch dict, optionally
 # carrying its own ``connected`` flags (the hetero Borůvka-component rule,
-# which overrides the scorer's FW reachability) — and receive
-# ``(costs, metrics)`` back.  _drive runs one generator against one
-# Evaluator (the classic entry points below); drive_stacked (bottom of this
-# module) runs many in lockstep with their requests concatenated into
-# single scorer calls.
+# which overrides the scorer's FW reachability) and/or a per-request
+# ``weights`` vector (a schedule's ramped objective weights at the run's
+# current progress) — and receive ``(costs, metrics)`` back.  _drive runs
+# one generator against one Evaluator (the classic entry points below);
+# drive_stacked (bottom of this module) runs many in lockstep with their
+# requests concatenated into single scorer calls.
 # ---------------------------------------------------------------------------
 
 def _request_parts(req):
-    """Normalize a scoring request to ``(batch, conn_override, size)``."""
+    """Normalize a scoring request to
+    ``(batch, conn_override, size, weights_override)``."""
+    wrow = None
+    if isinstance(req, tuple):            # weight-tagged host graph list
+        req, wrow = req
     if isinstance(req, dict):
         batch = dict(req)
         gconn = batch.pop("connected", None)
-        return batch, gconn, int(batch["W"].shape[0])
-    return stack_graphs(req), None, len(req)
+        wrow = batch.pop("weights", wrow)
+        return batch, gconn, int(batch["W"].shape[0]), wrow
+    return stack_graphs(req), None, len(req), wrow
+
+
+def _tag(req, weights):
+    """Attach a schedule's weight vector to a scoring request (no-op when
+    ``weights`` is None — the evaluator's static weights then apply)."""
+    if weights is None:
+        return req
+    if isinstance(req, dict):
+        return dict(req, weights=weights)
+    return (req, weights)
+
+
+def _sched_progress(done, total, t0: float,
+                    budget_s: float | None) -> float:
+    """A run's progress fraction for schedule ramps: completed units over
+    the unit budget when one is set, elapsed wall fraction otherwise."""
+    if total:
+        return min(1.0, done / total)
+    if budget_s:
+        return min(1.0, (time.monotonic() - t0) / budget_s)
+    return 0.0
 
 
 def _score_request(ev: Evaluator, req) -> tuple[np.ndarray, dict]:
-    batch, gconn, _ = _request_parts(req)
-    metrics = ev.score_batch(batch)
+    batch, gconn, _, wrow = _request_parts(req)
+    metrics = ev.score_batch(batch, weights=wrow)
     if gconn is not None:
         metrics["connected"] = np.asarray(gconn)
     return ev.costs_from(metrics), metrics
@@ -237,22 +306,43 @@ def best_random_steps(ev: Evaluator, rng: np.random.Generator, *,
                       time_budget_s: float | None = None,
                       max_evals: int | None = None,
                       batch: int = 32):
-    """Generator form of :func:`best_random` (yields graphs to score)."""
+    """Generator form of :func:`best_random` (yields graphs to score).
+
+    With a schedule attached to the evaluator, each batch is scored under
+    the ramped weights at the run's progress, and the per-batch winners
+    are re-ranked under the *final* (progress 1.0) weights at the end —
+    costs from different ramp stages are not comparable, so ``best_*``
+    always refers to the final weighting.
+    """
     res = OptResult(None, np.inf, {})
     t0 = time.monotonic()
+    pool_sols, pool_graphs = [], []
     while True:
         if time_budget_s is not None and time.monotonic() - t0 > time_budget_s:
             break
         if max_evals is not None and res.n_evaluated >= max_evals:
             break
         sols, graphs = ev.generate_valid(ev.rep.random, rng, batch)
-        costs, metrics = yield graphs
+        w = ev.sched_weights(_sched_progress(res.n_evaluated, max_evals,
+                                             t0, time_budget_s))
+        costs, metrics = yield _tag(graphs, w)
         res.n_evaluated += len(sols)
         i = int(np.argmin(costs))
+        if ev.schedule is not None:
+            pool_sols.append(sols[i])
+            pool_graphs.append(graphs[i])
         if costs[i] < res.best_cost:
             res.best_cost = float(costs[i])
             res.best_sol = sols[i]
             res.best_metrics = _metrics_row(metrics, i)
+        res.history.append((time.monotonic() - t0, res.n_evaluated,
+                            res.best_cost))
+    if ev.schedule is not None and pool_sols:
+        costs, metrics = yield _tag(pool_graphs, ev.sched_weights(1.0))
+        i = int(np.argmin(costs))
+        res.best_cost = float(costs[i])
+        res.best_sol = pool_sols[i]
+        res.best_metrics = _metrics_row(metrics, i)
         res.history.append((time.monotonic() - t0, res.n_evaluated,
                             res.best_cost))
     res.n_generated = ev.n_generated
@@ -277,13 +367,21 @@ def genetic_algorithm_steps(ev: Evaluator, rng: np.random.Generator, *,
                             p_mutation: float = 0.5,
                             time_budget_s: float | None = None,
                             max_generations: int | None = None):
-    """Generator form of :func:`genetic_algorithm` (yields graphs)."""
+    """Generator form of :func:`genetic_algorithm` (yields graphs).
+
+    With a schedule, each generation is scored under the ramped weights at
+    ``gen / max_generations`` (selection pressure hardens over the run)
+    and the final population is re-ranked under the final weights for
+    ``best_*``.
+    """
     res = OptResult(None, np.inf, {})
     t0 = time.monotonic()
     sols, graphs = ev.generate_valid(ev.rep.random, rng, population)
     gen = 0
     while True:
-        costs, metrics = yield graphs
+        w = ev.sched_weights(_sched_progress(gen, max_generations, t0,
+                                             time_budget_s))
+        costs, metrics = yield _tag(graphs, w)
         res.n_evaluated += len(sols)
         order = np.argsort(costs)
         if costs[order[0]] < res.best_cost:
@@ -319,6 +417,14 @@ def genetic_algorithm_steps(ev: Evaluator, rng: np.random.Generator, *,
             new_sols += cs
             new_graphs += cg
         sols, graphs = new_sols, new_graphs
+    if ev.schedule is not None:
+        costs, metrics = yield _tag(graphs, ev.sched_weights(1.0))
+        i = int(np.argmin(costs))
+        res.best_cost = float(costs[i])
+        res.best_sol = sols[i]
+        res.best_metrics = _metrics_row(metrics, i)
+        res.history.append((time.monotonic() - t0, res.n_evaluated,
+                            res.best_cost))
     res.n_generated = ev.n_generated
     res.normalizers = ev.norm
     return res
@@ -369,11 +475,17 @@ def simulated_annealing_steps(ev: Evaluator, rng: np.random.Generator, *,
                               chains: int = 1,
                               time_budget_s: float | None = None,
                               max_iters: int | None = None):
-    """Generator form of :func:`simulated_annealing` (yields graphs)."""
+    """Generator form of :func:`simulated_annealing` (yields graphs).
+
+    With a schedule, proposals are accepted under the ramped weights at
+    ``it / max_iters`` (chains traverse infeasible regions early, harden
+    late) and the final chain states are re-ranked under the final
+    weights for ``best_*``.
+    """
     res = OptResult(None, np.inf, {})
     tstart = time.monotonic()
     sols, graphs = ev.generate_valid(ev.rep.random, rng, chains)
-    costs, metrics = yield graphs
+    costs, metrics = yield _tag(graphs, ev.sched_weights(0.0))
     res.n_evaluated += chains
     temps = np.full(chains, float(t0_temp))
     block_costs: list[np.ndarray] = []
@@ -394,7 +506,18 @@ def simulated_annealing_steps(ev: Evaluator, rng: np.random.Generator, *,
                 lambda r, c=c: ev.rep.mutate(sols[c], r), rng, 1)
             nb_sols += s
             nb_graphs += g
-        nb_costs, nb_metrics = yield nb_graphs
+        w = ev.sched_weights(_sched_progress(it, max_iters, tstart,
+                                             time_budget_s))
+        if w is None:
+            nb_costs, nb_metrics = yield nb_graphs
+        else:
+            # Ramped weights shift the incumbents' costs too: score the
+            # proposals and the current chain states in one request so the
+            # Metropolis delta compares both under the *current* weights.
+            all_costs, nb_metrics = yield _tag(nb_graphs + graphs, w)
+            nb_costs = all_costs[:chains]
+            costs = all_costs[chains:]
+            nb_metrics = {k: v[:chains] for k, v in nb_metrics.items()}
         res.n_evaluated += chains
         accept = _sa_accept(rng, nb_costs - costs, temps)
         for c in range(chains):
@@ -411,6 +534,14 @@ def simulated_annealing_steps(ev: Evaluator, rng: np.random.Generator, *,
         if it % block_len == 0:
             temps = _sa_cool(temps, block_costs, alpha, beta)
             block_costs = []
+        res.history.append((time.monotonic() - tstart, res.n_evaluated,
+                            res.best_cost))
+    if ev.schedule is not None:
+        fcosts, fmetrics = yield _tag(graphs, ev.sched_weights(1.0))
+        i = int(np.argmin(fcosts))
+        res.best_cost = float(fcosts[i])
+        res.best_sol = sols[i]
+        res.best_metrics = _metrics_row(fmetrics, i)
         res.history.append((time.monotonic() - tstart, res.n_evaluated,
                             res.best_cost))
     res.n_generated = ev.n_generated
@@ -506,6 +637,8 @@ class DevicePipeline:
                 t = jnp.where(m, mt, t)
                 r = jnp.where(m, mr, r)
                 return t, r, gb.build(t, r)
+
+            _rebuild = jax.jit(gb.build)
         else:
             gb = HeteroGraphBatch(rep.arch)
             _rand_op = jax.jit(ops.random_batch, static_argnums=1)
@@ -554,18 +687,26 @@ class DevicePipeline:
                 o, r = _child_op(key, oa, ra, ob, rb, p_mut)
                 return o, r, _graph(o, r)
 
-        cls._STAGE_CACHE[key] = (ops, gb, _gen, _mut, _child)
+            _rebuild = _graph
+
+        cls._STAGE_CACHE[key] = (ops, gb, _gen, _mut, _child, _rebuild)
         return cls._STAGE_CACHE[key]
 
     def __init__(self, ev: Evaluator):
         self.ev = ev
         (self.ops, self.graphs, self._gen, self._mut,
-         self._child) = self._stages(ev.rep)
+         self._child, self._rebuild) = self._stages(ev.rep)
+
+    def rebuild(self, t, r) -> dict:
+        """Graph batch for existing solutions (no RNG): re-scoring a
+        population under different (e.g. schedule-final) weights."""
+        return dict(self._rebuild(t, r))
 
     def _key(self, rng: np.random.Generator):
         return jax.random.PRNGKey(int(rng.integers(2 ** 31 - 1)))
 
-    def _until_connected_steps(self, rng, make, n, max_rounds: int = 500):
+    def _until_connected_steps(self, rng, make, n, max_rounds: int = 500,
+                               weights=None):
         """Generator: run ``make`` until every slot holds a connected
         placement, yielding each produced batch as a scoring request and
         receiving ``(costs, metrics)`` back.
@@ -584,10 +725,13 @@ class DevicePipeline:
         (:func:`_score_request` or :func:`drive_stacked`) then lets it
         override the scorer's FW-reachability output.
 
+        ``weights`` (a schedule's runtime weight vector) tags every
+        yielded request, so ramped costs apply to resample rounds too.
+
         Returns ``(t, r, metrics, costs)`` for the filled slots.
         """
         t, r, batch = make(self._key(rng), np.arange(n))
-        costs, metrics = yield batch
+        costs, metrics = yield _tag(batch, weights)
         costs = np.array(costs)
         metrics = {k: np.array(v) for k, v in metrics.items()}
         self.ev.n_generated += n
@@ -600,7 +744,7 @@ class DevicePipeline:
             size = min(max(size, min(8, n)), n)
             idx = bad[np.arange(size) % len(bad)]
             t2, r2, batch2 = make(self._key(rng), idx)
-            c2, m2 = yield batch2
+            c2, m2 = yield _tag(batch2, weights)
             self.ev.n_generated += size
             conn2 = np.asarray(m2["connected"]).astype(bool)
             slots, rows = [], []
@@ -621,23 +765,25 @@ class DevicePipeline:
             "could not batch-generate connected placements")
 
     # -- generator forms (used by the *_batched_steps optimizers) -----------
-    def sample_random_steps(self, rng, n: int):
+    def sample_random_steps(self, rng, n: int, weights=None):
         return self._until_connected_steps(
-            rng, lambda k, idx: self._gen(k, len(idx)), n)
+            rng, lambda k, idx: self._gen(k, len(idx)), n, weights=weights)
 
-    def sample_mutants_steps(self, rng, t, r):
+    def sample_mutants_steps(self, rng, t, r, weights=None):
         def make(k, idx):
             i = jnp.asarray(idx)
             return self._mut(k, t[i], r[i])
-        return self._until_connected_steps(rng, make, t.shape[0])
+        return self._until_connected_steps(rng, make, t.shape[0],
+                                           weights=weights)
 
     def sample_children_steps(self, rng, pat, par, pbt, pbr,
-                              p_mutation: float):
+                              p_mutation: float, weights=None):
         def make(k, idx):
             i = jnp.asarray(idx)
             return self._child(k, pat[i], par[i], pbt[i], pbr[i],
                                p_mutation)
-        return self._until_connected_steps(rng, make, pat.shape[0])
+        return self._until_connected_steps(rng, make, pat.shape[0],
+                                           weights=weights)
 
     # -- direct batched counterparts of the representation operators --------
     def _run(self, gen):
@@ -669,22 +815,41 @@ def best_random_batched_steps(ev: Evaluator, rng: np.random.Generator, *,
                               time_budget_s: float | None = None,
                               max_evals: int | None = None,
                               batch: int = 32):
-    """BR over the device pipeline: one fused request per batch."""
+    """BR over the device pipeline: one fused request per batch.  Under a
+    schedule, batches score with ramped weights and the per-batch winners
+    are re-ranked under the final weights (see ``best_random_steps``)."""
     pipe = ev.pipeline()
     res = OptResult(None, np.inf, {})
     t0 = time.monotonic()
+    pool_t, pool_r = [], []
     while True:
         if time_budget_s is not None and time.monotonic() - t0 > time_budget_s:
             break
         if max_evals is not None and res.n_evaluated >= max_evals:
             break
-        t, r, metrics, costs = yield from pipe.sample_random_steps(rng, batch)
+        w = ev.sched_weights(_sched_progress(res.n_evaluated, max_evals,
+                                             t0, time_budget_s))
+        t, r, metrics, costs = yield from pipe.sample_random_steps(
+            rng, batch, weights=w)
         res.n_evaluated += batch
         i = int(np.argmin(costs))
+        if ev.schedule is not None:
+            pool_t.append(t[i])
+            pool_r.append(r[i])
         if costs[i] < res.best_cost:
             res.best_cost = float(costs[i])
             res.best_sol = _sol_at(t, r, i)
             res.best_metrics = _metrics_row(metrics, i)
+        res.history.append((time.monotonic() - t0, res.n_evaluated,
+                            res.best_cost))
+    if ev.schedule is not None and pool_t:
+        pt, pr = jnp.stack(pool_t), jnp.stack(pool_r)
+        costs, metrics = yield _tag(pipe.rebuild(pt, pr),
+                                    ev.sched_weights(1.0))
+        i = int(np.argmin(costs))
+        res.best_cost = float(costs[i])
+        res.best_sol = _sol_at(pt, pr, i)
+        res.best_metrics = _metrics_row(metrics, i)
         res.history.append((time.monotonic() - t0, res.n_evaluated,
                             res.best_cost))
     res.n_generated = ev.n_generated
@@ -709,15 +874,27 @@ def genetic_algorithm_batched_steps(ev: Evaluator,
                                     p_mutation: float = 0.5,
                                     time_budget_s: float | None = None,
                                     max_generations: int | None = None):
-    """Generator form of :func:`genetic_algorithm_batched`."""
+    """Generator form of :func:`genetic_algorithm_batched`.  Under a
+    schedule, children score with the ramped weights at their generation,
+    the retained population is re-scored under the current weights each
+    generation (the host GA re-yields its whole population per
+    generation, so elite costs never go stale against the ramp), and the
+    final population is re-ranked under the final weights."""
     pipe = ev.pipeline()
     res = OptResult(None, np.inf, {})
     t0 = time.monotonic()
-    t, r, metrics, costs = yield from pipe.sample_random_steps(rng,
-                                                               population)
+    t, r, metrics, costs = yield from pipe.sample_random_steps(
+        rng, population, weights=ev.sched_weights(0.0))
     res.n_evaluated += population
     gen = 0
     while True:
+        if ev.schedule is not None and gen > 0:
+            # Unify the mixed-progress costs (elites were scored under an
+            # earlier, weaker ramp stage) so selection pressure hardens
+            # for the whole population, not just the fresh children.
+            w_now = ev.sched_weights(_sched_progress(
+                gen, max_generations, t0, time_budget_s))
+            costs, metrics = yield _tag(pipe.rebuild(t, r), w_now)
         order = np.argsort(costs)
         if costs[order[0]] < res.best_cost:
             i = int(order[0])
@@ -740,9 +917,11 @@ def genetic_algorithm_batched_steps(ev: Evaluator,
         n_child = population - elitism
         pa = np.array([tournament_pick() for _ in range(n_child)])
         pb = np.array([tournament_pick() for _ in range(n_child)])
+        w = ev.sched_weights(_sched_progress(gen, max_generations, t0,
+                                             time_budget_s))
         ct, cr, cm, ccosts = yield from pipe.sample_children_steps(
             rng, t[jnp.asarray(pa)], r[jnp.asarray(pa)],
-            t[jnp.asarray(pb)], r[jnp.asarray(pb)], p_mutation)
+            t[jnp.asarray(pb)], r[jnp.asarray(pb)], p_mutation, weights=w)
         res.n_evaluated += n_child
         elite = order[:elitism]
         t = jnp.concatenate([t[jnp.asarray(elite)], ct])
@@ -750,6 +929,15 @@ def genetic_algorithm_batched_steps(ev: Evaluator,
         metrics = {k: np.concatenate([v[elite], cm[k]])
                    for k, v in metrics.items()}
         costs = np.concatenate([costs[elite], ccosts])
+    if ev.schedule is not None:
+        costs, metrics = yield _tag(pipe.rebuild(t, r),
+                                    ev.sched_weights(1.0))
+        i = int(np.argmin(costs))
+        res.best_cost = float(costs[i])
+        res.best_sol = _sol_at(t, r, i)
+        res.best_metrics = _metrics_row(metrics, i)
+        res.history.append((time.monotonic() - t0, res.n_evaluated,
+                            res.best_cost))
     res.n_generated = ev.n_generated
     res.normalizers = ev.norm
     return res
@@ -779,11 +967,15 @@ def simulated_annealing_batched_steps(ev: Evaluator,
                                       chains: int = 1,
                                       time_budget_s: float | None = None,
                                       max_iters: int | None = None):
-    """Generator form of :func:`simulated_annealing_batched`."""
+    """Generator form of :func:`simulated_annealing_batched`.  Under a
+    schedule, proposals (and, for exact Metropolis deltas, the re-scored
+    incumbents) use the ramped weights at the current iteration; the final
+    chain states are re-ranked under the final weights."""
     pipe = ev.pipeline()
     res = OptResult(None, np.inf, {})
     tstart = time.monotonic()
-    t, r, metrics, costs = yield from pipe.sample_random_steps(rng, chains)
+    t, r, metrics, costs = yield from pipe.sample_random_steps(
+        rng, chains, weights=ev.sched_weights(0.0))
     res.n_evaluated += chains
     temps = np.full(chains, float(t0_temp))
     block_costs: list[np.ndarray] = []
@@ -798,7 +990,14 @@ def simulated_annealing_batched_steps(ev: Evaluator,
             break
         if max_iters is not None and it >= max_iters:
             break
-        nt, nr, nm, ncosts = yield from pipe.sample_mutants_steps(rng, t, r)
+        w = ev.sched_weights(_sched_progress(it, max_iters, tstart,
+                                             time_budget_s))
+        nt, nr, nm, ncosts = yield from pipe.sample_mutants_steps(
+            rng, t, r, weights=w)
+        if w is not None:
+            # Incumbent costs are stale under ramped weights: re-score the
+            # chain states so the Metropolis delta is exact at progress t.
+            costs, _ = yield _tag(pipe.rebuild(t, r), w)
         res.n_evaluated += chains
         accept = _sa_accept(rng, ncosts - costs, temps)
         acc = jnp.asarray(accept).reshape((-1,) + (1,) * (t.ndim - 1))
@@ -815,6 +1014,15 @@ def simulated_annealing_batched_steps(ev: Evaluator,
         if it % block_len == 0:
             temps = _sa_cool(temps, block_costs, alpha, beta)
             block_costs = []
+        res.history.append((time.monotonic() - tstart, res.n_evaluated,
+                            res.best_cost))
+    if ev.schedule is not None:
+        fcosts, fmetrics = yield _tag(pipe.rebuild(t, r),
+                                      ev.sched_weights(1.0))
+        i = int(np.argmin(fcosts))
+        res.best_cost = float(fcosts[i])
+        res.best_sol = _sol_at(t, r, i)
+        res.best_metrics = _metrics_row(fmetrics, i)
         res.history.append((time.monotonic() - tstart, res.n_evaluated,
                             res.best_cost))
     res.n_generated = ev.n_generated
@@ -847,15 +1055,18 @@ def drive_stacked(items: list) -> tuple[list, list[int], list[float]]:
     scoring requests into one batched scorer call.
 
     ``items`` is a list of ``(generator, evaluator)`` pairs whose
-    evaluators share one jitted scorer (same layout/chunk/backend/
-    objective).  Each round collects the pending scoring requests of every
-    live generator — host graph lists and device batch dicts mix freely —
-    scores their concatenation once with *per-row normalizer vectors* (each
-    row carries its own run's norms, so the in-scorer ``cost`` is exact for
-    every run), splits the metrics back (restoring per-request
-    ``connected`` overrides), and resumes the generators.  Results are
-    bit-for-bit identical to driving each generator alone (the scorer is
-    vmapped elementwise), with ~k fewer dispatches.
+    evaluators share one jitted scorer (same layout/chunk/backend and
+    objective *structure* — objectives differing only in weights share).
+    Each round collects the pending scoring requests of every live
+    generator — host graph lists and device batch dicts mix freely —
+    scores their concatenation once with *per-row normalizer and weight
+    vectors* (each row carries its own run's norms and objective weights
+    — a Pareto grid point's scalarization, or a schedule's ramped weights
+    from the request tag — so the in-scorer ``cost`` is exact for every
+    run), splits the metrics back (restoring per-request ``connected``
+    overrides), and resumes the generators.  Results are bit-for-bit
+    identical to driving each generator alone (the scorer is vmapped
+    elementwise), with ~k fewer dispatches.
 
     Returns ``(results, n_generated, seconds)`` aligned with ``items`` —
     ``n_generated[i]`` is the number of placements generated by run ``i``
@@ -902,8 +1113,15 @@ def drive_stacked(items: list) -> tuple[list, list[int], list[float]]:
         norms = np.concatenate(
             [np.broadcast_to(items[i][1].norm_vec, (sz, NORM_DIM))
              for i, sz in zip(order, sizes)])
+        weights = np.concatenate(
+            [np.broadcast_to(np.asarray(
+                items[i][1].weights_vec if parts[i][3] is None
+                else parts[i][3], np.float32),
+                (sz, items[i][1].weights_vec.shape[0]))
+             for i, sz in zip(order, sizes)])
         ts = time.monotonic()
-        metrics = items[order[0]][1].score_batch(cat, norms=norms)
+        metrics = items[order[0]][1].score_batch(cat, norms=norms,
+                                                 weights=weights)
         t_score = time.monotonic() - ts
         total = max(sum(sizes), 1)
         off = 0

@@ -1,0 +1,442 @@
+"""Device-resident Pareto sweeps over objective scalarizations.
+
+PlaceIT's cost function is a scalarization of a fundamentally
+multi-objective space — L1-to-L2 latency vs L2-to-memory latency vs
+throughput vs area (paper §IV-B; RapidChiplet frames the same problem as
+rapid design-space exploration).  The objective layer's runtime weight
+vectors (``repro.core.objective.weights_vec``) make exploring that space
+cheap: every scalarization of one term *structure* shares a single
+compiled scorer, so a whole grid of weightings runs as one stacked sweep
+(``drive_stacked`` lockstep, objective-keyed evaluator cache with shared
+normalizer draws).
+
+* :class:`ParetoGridSpec` — a serializable grid of scalarizations: a
+  cartesian product of per-term weight axes and (optionally) a
+  :class:`~repro.core.objective.TrafficMix` axis, expanded against a base
+  :class:`~repro.core.objective.Objective`.
+* :func:`nondominated_mask` — vectorized dominance on device: one jitted
+  ``[B, B, n]`` comparison over the ``[B, n_objectives]`` cost matrix.
+  :func:`nondominated_mask_host` is the brute-force host reference the
+  device mask must match bit-for-bit (tested on all four paper archs).
+* :func:`hypervolume` — exact dominated hypervolume vs a reference point
+  (recursive dimension sweep on host for any n; a jitted sort-and-sweep
+  device path for the n == 2 case).
+* :class:`ParetoFront` / :class:`ParetoPoint` — typed, JSON
+  round-trippable result records with per-point provenance: the grid
+  label, expanded-config index, scalarization objective, algorithm /
+  repetition, the placement itself, and the nine raw metrics.
+* :func:`run_pareto_sweep` / :func:`run_pareto` — run one optimization
+  population per grid point through ``api.run_sweep`` (stacked), re-score
+  every run's best placement in a single stacked scorer call under the
+  *base* objective, and compute the front over the per-term cost matrix.
+
+The cost matrix columns are the base objective's weighted terms (float32,
+straight from the device evaluation); dominance is invariant under the
+positive per-column scaling the weights apply, so fronts are comparable
+across weightings of the same structure.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import json
+from dataclasses import dataclass, field
+from typing import Mapping
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .api import make_evaluator, make_rep, run_sweep
+from .chiplets import paper_arch
+from .objective import (Objective, TrafficMix, compile_objective, norms_vec,
+                        weights_vec)
+from .topology import stack_graphs
+
+
+# ---------------------------------------------------------------------------
+# Grid specification.
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ParetoGridSpec:
+    """A grid of objective scalarizations.
+
+    ``term_weights`` maps objective term names to the weight values that
+    term sweeps over; ``mixes`` is an optional axis of
+    :class:`TrafficMix` values.  The grid is the cartesian product of all
+    axes, expanded against a base objective with :meth:`points` — every
+    expanded objective keeps the base term *structure*, so the whole grid
+    shares one compiled scorer and stacks in ``run_sweep``.
+    """
+
+    term_weights: tuple = ()     # sorted ((term_name, (v, ...)), ...)
+    mixes: tuple = ()            # optional TrafficMix axis
+
+    def __post_init__(self):
+        tw = self.term_weights
+        items = tw.items() if isinstance(tw, Mapping) else tw
+        object.__setattr__(self, "term_weights", tuple(sorted(
+            (str(k), tuple(float(x) for x in v)) for k, v in items)))
+        for name, vals in self.term_weights:
+            if not vals:
+                raise ValueError(f"empty weight axis for term {name!r}")
+        object.__setattr__(self, "mixes", tuple(
+            m if isinstance(m, TrafficMix) else TrafficMix.from_dict(m)
+            for m in self.mixes))
+
+    @property
+    def n_points(self) -> int:
+        n = 1
+        for _, vals in self.term_weights:
+            n *= len(vals)
+        return n * max(1, len(self.mixes))
+
+    def points(self, base: Objective) -> list[tuple[str, Objective]]:
+        """Expand to ``(label, objective)`` pairs against ``base``."""
+        names = [t.name for t in base.terms]
+        for name, _ in self.term_weights:
+            if name not in names:
+                raise ValueError(
+                    f"pareto grid sweeps unknown objective term {name!r}; "
+                    f"objective has {names}")
+        axes = [[(f"{name}={v:g}", name, v) for v in vals]
+                for name, vals in self.term_weights]
+        mix_axis = ([(f"mix={i}", None, m)
+                     for i, m in enumerate(self.mixes)]
+                    or [("", None, None)])
+        out = []
+        for combo in itertools.product(mix_axis, *axes):
+            obj = base
+            labels = []
+            for lab, name, v in combo:
+                if name is None:
+                    if v is not None:       # TrafficMix axis
+                        obj = dataclasses.replace(obj, mix=v)
+                        labels.append(lab)
+                    continue
+                terms = tuple(dataclasses.replace(t, weight=v)
+                              if t.name == name else t for t in obj.terms)
+                obj = dataclasses.replace(obj, terms=terms)
+                labels.append(lab)
+            out.append(("|".join(labels) or "base", obj))
+        return out
+
+    def to_dict(self) -> dict:
+        return {"term_weights": {k: list(v) for k, v in self.term_weights},
+                "mixes": [m.to_dict() for m in self.mixes]}
+
+    @classmethod
+    def from_dict(cls, d: Mapping) -> "ParetoGridSpec":
+        if isinstance(d, ParetoGridSpec):
+            return d
+        unknown = set(d) - {f.name for f in dataclasses.fields(cls)}
+        if unknown:
+            raise ValueError(
+                f"unknown ParetoGridSpec keys: {sorted(unknown)}")
+        return cls(**dict(d))
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_dict(), indent=1)
+
+    @classmethod
+    def from_json(cls, s: str) -> "ParetoGridSpec":
+        return cls.from_dict(json.loads(s))
+
+
+# ---------------------------------------------------------------------------
+# Dominance + hypervolume.
+# ---------------------------------------------------------------------------
+
+@jax.jit
+def _nondom(Y):
+    le = (Y[:, None, :] <= Y[None, :, :]).all(-1)
+    lt = (Y[:, None, :] < Y[None, :, :]).any(-1)
+    return ~(le & lt).any(axis=0)
+
+
+def nondominated_mask(Y) -> np.ndarray:
+    """Device dominance: ``mask[j]`` is True iff no row of the (lower is
+    better) float32 cost matrix ``Y [B, n]`` dominates row ``j`` — one
+    vectorized ``[B, B, n]`` comparison, jitted."""
+    Y = jnp.asarray(np.asarray(Y, np.float32))
+    return np.asarray(_nondom(Y))
+
+
+def nondominated_mask_host(Y) -> np.ndarray:
+    """Brute-force host reference for :func:`nondominated_mask` (same
+    float32 matrix, same tie semantics: duplicates do not dominate each
+    other)."""
+    Y = np.asarray(Y, np.float32)
+    B = Y.shape[0]
+    mask = np.ones(B, bool)
+    for j in range(B):
+        for i in range(B):
+            if (Y[i] <= Y[j]).all() and (Y[i] < Y[j]).any():
+                mask[j] = False
+                break
+    return mask
+
+
+@jax.jit
+def _hv2d(P, ref):
+    order = jnp.argsort(P[:, 0])
+    p = P[order]
+
+    def body(carry, row):
+        best1, acc = carry
+        acc = acc + (ref[0] - row[0]) * jnp.maximum(best1 - row[1], 0.0)
+        return (jnp.minimum(best1, row[1]), acc), None
+
+    (_, hv), _ = jax.lax.scan(body, (ref[1], jnp.zeros((), P.dtype)), p)
+    return hv
+
+
+def _hv_rec(pts: np.ndarray, ref: np.ndarray) -> float:
+    """Exact hypervolume by recursive dimension sweep (host float64;
+    fronts are small).  ``pts`` must be clipped to ``ref``."""
+    if pts.shape[0] == 0:
+        return 0.0
+    if pts.shape[1] == 1:
+        return float(ref[0] - pts[:, 0].min())
+    order = np.argsort(pts[:, -1], kind="stable")
+    pts = pts[order]
+    zs = pts[:, -1]
+    hv = 0.0
+    for i in range(len(pts)):
+        z_hi = zs[i + 1] if i + 1 < len(pts) else ref[-1]
+        if z_hi > zs[i]:
+            hv += (z_hi - zs[i]) * _hv_rec(pts[:i + 1, :-1], ref[:-1])
+    return hv
+
+
+def hypervolume(Y, ref, *, device: bool | None = None) -> float:
+    """Dominated hypervolume of (lower is better) points ``Y [B, n]`` vs a
+    reference point ``ref [n]`` (every coordinate worse than the front).
+
+    Exact for any ``n`` via the host recursion; for ``n == 2`` a jitted
+    sort-and-sweep computes the same value on device (the default there —
+    pass ``device=False`` to force the host path, e.g. for testing)."""
+    Y = np.asarray(Y, np.float64)
+    ref = np.asarray(ref, np.float64)
+    if Y.size == 0:
+        return 0.0
+    pts = np.minimum(Y, ref)             # clip: no negative contributions
+    if (device is None or device) and Y.shape[1] == 2:
+        return float(_hv2d(jnp.asarray(pts), jnp.asarray(ref)))
+    return _hv_rec(pts, ref)
+
+
+# ---------------------------------------------------------------------------
+# Per-term cost matrix (the Pareto objective vectors), on device.
+# ---------------------------------------------------------------------------
+
+def term_matrix(metrics: dict, batch: dict, objective: Objective, norm,
+                vp: int) -> np.ndarray:
+    """``[B, n_terms]`` float32 weighted per-term costs for a scored,
+    stacked batch — one jitted vmapped evaluation of the compiled
+    objective's terms (the same device functions the scorer's in-jit
+    ``cost`` sums)."""
+    cobj = compile_objective(objective)
+    row = jnp.asarray(norms_vec(norm))
+    w = jnp.asarray(weights_vec(objective))
+    sample = {k: jnp.asarray(np.asarray(v)) for k, v in metrics.items()
+              if k not in ("cost", "connected", "overflow")}
+    for k in ("edges", "edge_mask", "edge_len"):
+        if k in batch:
+            sample[k] = jnp.asarray(np.asarray(batch[k]))
+
+    @jax.jit
+    def mat(s):
+        return jax.vmap(lambda si: jnp.stack(
+            cobj.term_values(dict(si, Vp=vp), row, w)))(s)
+
+    return np.asarray(mat(sample), np.float32)
+
+
+# ---------------------------------------------------------------------------
+# Typed result records.
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ParetoPoint:
+    """One candidate with full provenance back to its config + placement.
+
+    ``terms`` are the base-objective weighted per-term costs (the row of
+    the front's cost matrix); ``cost`` is the scalar cost under the
+    point's *own* scalarization (``objective``); ``placement`` serializes
+    the winning solution (``types``/``rots`` — the homogeneous grid's
+    [R, C] arrays or the heterogeneous (order, rotations) vectors).
+    """
+
+    label: str
+    cfg_index: int
+    algorithm: str
+    repetition: int
+    objective: Objective
+    cost: float
+    terms: tuple
+    metrics: dict = field(default_factory=dict)
+    placement: dict = field(default_factory=dict)
+
+    def to_dict(self) -> dict:
+        return {"label": self.label, "cfg_index": self.cfg_index,
+                "algorithm": self.algorithm, "repetition": self.repetition,
+                "objective": self.objective.to_dict(), "cost": self.cost,
+                "terms": list(self.terms), "metrics": dict(self.metrics),
+                "placement": dict(self.placement)}
+
+    @classmethod
+    def from_dict(cls, d: Mapping) -> "ParetoPoint":
+        d = dict(d)
+        d["objective"] = Objective.from_dict(d["objective"])
+        d["terms"] = tuple(float(x) for x in d["terms"])
+        return cls(**d)
+
+    def sol(self):
+        """The placement as the host representation's ``(a, b)`` arrays."""
+        return (np.asarray(self.placement["types"], np.int8),
+                np.asarray(self.placement["rots"], np.int8))
+
+
+@dataclass(frozen=True)
+class ParetoFront:
+    """A non-dominated front over one base config's scalarization grid."""
+
+    arch: str
+    config: str
+    term_names: tuple
+    ref_point: tuple
+    hypervolume: float
+    points: tuple            # non-dominated ParetoPoints, by first term
+    n_candidates: int
+    matrix: tuple = ()       # full [B, n_terms] candidate cost matrix
+
+    def to_dict(self) -> dict:
+        return {"arch": self.arch, "config": self.config,
+                "term_names": list(self.term_names),
+                "ref_point": list(self.ref_point),
+                "hypervolume": self.hypervolume,
+                "points": [p.to_dict() for p in self.points],
+                "n_candidates": self.n_candidates,
+                "matrix": [list(r) for r in self.matrix]}
+
+    @classmethod
+    def from_dict(cls, d: Mapping) -> "ParetoFront":
+        d = dict(d)
+        d["term_names"] = tuple(d["term_names"])
+        d["ref_point"] = tuple(float(x) for x in d["ref_point"])
+        d["points"] = tuple(ParetoPoint.from_dict(p) for p in d["points"])
+        d["matrix"] = tuple(tuple(float(x) for x in r)
+                            for r in d.get("matrix", ()))
+        return cls(**d)
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_dict(), indent=1)
+
+    @classmethod
+    def from_json(cls, s: str) -> "ParetoFront":
+        return cls.from_dict(json.loads(s))
+
+
+# ---------------------------------------------------------------------------
+# The sweep engine.
+# ---------------------------------------------------------------------------
+
+def compute_front(base_cfg, entries, *, ref_point=None) -> ParetoFront:
+    """Front over ``entries`` = ``(label, cfg_index, objective,
+    RunRecord)`` tuples (``objective`` is the scalarization that produced
+    the record).
+
+    Re-scores every record's best placement in one stacked scorer call
+    (device; base-config evaluator, shared scorer-cache entry), builds the
+    ``[B, n_terms]`` cost matrix with :func:`term_matrix`, masks the
+    non-dominated rows on device and reports the exact hypervolume vs
+    ``ref_point`` (default: 5% beyond the per-term candidate maximum).
+    """
+    arch = paper_arch(base_cfg.arch, base_cfg.config)
+    rep = make_rep(arch, base_cfg.arch, base_cfg.mutation_mode)
+    # Reuse the sweep's normalizer draw (carried on every OptResult) so
+    # the matrix is normalized exactly like the in-run costs — and the
+    # (hetero-expensive) norm_samples generation is not paid twice.
+    norm = next((rec.result.normalizers for _, _, _, rec in entries
+                 if rec.result.normalizers is not None), None)
+    ev = make_evaluator(rep, arch, rng=np.random.default_rng(base_cfg.seed),
+                        norm_samples=base_cfg.norm_samples,
+                        chunk=base_cfg.chunk, backend=base_cfg.backend,
+                        objective=base_cfg.objective, norm=norm)
+    graphs = [rep.score_graph(rec.result.best_sol)
+              for _, _, _, rec in entries]
+    batch = stack_graphs(graphs)
+    metrics = ev.score_batch(batch)          # one stacked device call
+    Y = term_matrix(metrics, batch, base_cfg.objective, ev.norm,
+                    rep.layout.Vp)
+    mask = nondominated_mask(Y)
+    if ref_point is None:
+        span = Y.max(axis=0) - Y.min(axis=0)
+        ref = Y.max(axis=0) + 0.05 * np.maximum(span, 1.0)
+    else:
+        ref = np.asarray(ref_point, np.float64)
+    hv = hypervolume(Y[mask], ref)
+    metric_keys = [k for k in metrics if k not in ("cost", "connected")]
+    points = []
+    for i in np.nonzero(mask)[0]:
+        label, cfg_i, obj, rec = entries[int(i)]
+        a, b = rec.result.best_sol
+        points.append(ParetoPoint(
+            label=label, cfg_index=int(cfg_i), algorithm=rec.algorithm,
+            repetition=rec.repetition, objective=obj,
+            cost=float(rec.result.best_cost),
+            terms=tuple(float(x) for x in Y[i]),
+            metrics={k: float(metrics[k][i]) for k in metric_keys},
+            placement={"types": np.asarray(a).tolist(),
+                       "rots": np.asarray(b).tolist()}))
+    order = np.argsort([p.terms[0] for p in points], kind="stable")
+    points = tuple(points[int(i)] for i in order)
+    return ParetoFront(
+        arch=base_cfg.arch, config=base_cfg.config,
+        term_names=tuple(t.name for t in base_cfg.objective.terms),
+        ref_point=tuple(float(x) for x in ref),
+        hypervolume=float(hv), points=points, n_candidates=len(entries),
+        matrix=tuple(tuple(float(x) for x in r) for r in Y))
+
+
+def run_pareto_sweep(base_configs, grid, *, fold_repetitions: bool = True,
+                     stack_scoring: bool = True, ref_point=None):
+    """Expand every base config over ``grid``, run one stacked sweep, and
+    attach a :class:`ParetoFront` per base config.
+
+    Returns the underlying :class:`repro.core.api.SweepResult` (runs are
+    the *expanded* configs, in base-config-major, grid-point-minor order)
+    with ``fronts`` populated.  Because grid points share the base
+    objective's term structure, the whole grid shares one jitted scorer
+    and executes in ``drive_stacked`` lockstep — the per-row runtime
+    weight vectors keep every scalarization's in-scorer costs exact.
+    """
+    grid = ParetoGridSpec.from_dict(grid) \
+        if not isinstance(grid, ParetoGridSpec) else grid
+    if not isinstance(base_configs, (list, tuple)):
+        base_configs = (base_configs,)
+    expanded, prov = [], []
+    for b_i, cfg in enumerate(base_configs):
+        for label, obj in grid.points(cfg.objective):
+            prov.append((b_i, label, obj))
+            expanded.append(dataclasses.replace(cfg, objective=obj))
+    sweep = run_sweep(expanded, fold_repetitions=fold_repetitions,
+                      stack_scoring=stack_scoring)
+    fronts = []
+    for b_i, cfg in enumerate(base_configs):
+        entries = []
+        for i, run in enumerate(sweep.runs):
+            if prov[i][0] != b_i:
+                continue
+            for rec in run.records:
+                entries.append((prov[i][1], i, prov[i][2], rec))
+        fronts.append(compute_front(cfg, entries, ref_point=ref_point))
+    sweep.fronts = fronts
+    return sweep
+
+
+def run_pareto(base_cfg, grid, **kw) -> ParetoFront:
+    """One base config, one grid -> its :class:`ParetoFront`."""
+    return run_pareto_sweep(base_cfg, grid, **kw).fronts[0]

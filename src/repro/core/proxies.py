@@ -28,7 +28,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .chiplets import COMPUTE, IO, MEMORY, TRAFFIC_TYPES, ArchSpec
-from .objective import NORM_DIM, compile_objective
+from .objective import NORM_DIM, compile_objective, weight_dim, weights_vec
 
 INF_CUT = 1.0e8   # entries >= this are treated as "unreachable"
 _COUNT_CLIP = 1.0e30
@@ -181,7 +181,12 @@ def make_scorer(layout: Layout, *, fw_impl=fw_counts_ref, chunk: int = 16,
     output gains a per-placement ``cost`` — no host-side cost formula.
     The normalizer values enter as the runtime ``norms`` argument (a
     ``[NORM_DIM]`` vector, or ``[P, NORM_DIM]`` for per-row normalizers in
-    stacked cross-run scoring), so normalizer draws never retrace.
+    stacked cross-run scoring), so normalizer draws never retrace.  The
+    objective *weights* likewise enter as the runtime ``weights`` argument
+    (``[W_FIXED + n_terms]`` or per-row ``[P, ...]``, default the
+    objective's own :func:`~repro.core.objective.weights_vec`), so Pareto
+    weight grids and constraint-hardening schedules share one compiled
+    scorer — only the term structure is trace-time.
     """
     pairs = _type_pairs(layout)
     conn = (layout.Vp + np.arange(layout.N, dtype=np.int32),
@@ -191,9 +196,12 @@ def make_scorer(layout: Layout, *, fw_impl=fw_counts_ref, chunk: int = 16,
     cobj = compile_objective(objective, layout) \
         if objective is not None else None
     Vp = layout.Vp
+    if cobj is not None:
+        WDIM = weight_dim(objective)
+        default_w = weights_vec(objective)
 
     @jax.jit
-    def score(batch, norms=None):
+    def score(batch, norms=None, weights=None):
         batch = dict(batch)
         P = batch["W"].shape[0]
         if cobj is not None:
@@ -201,12 +209,17 @@ def make_scorer(layout: Layout, *, fw_impl=fw_counts_ref, chunk: int = 16,
                 norms = jnp.ones((NORM_DIM,), jnp.float32)
             batch["_norms"] = jnp.broadcast_to(
                 jnp.asarray(norms, jnp.float32), (P, NORM_DIM))
+            if weights is None:
+                weights = default_w
+            batch["_weights"] = jnp.broadcast_to(
+                jnp.asarray(weights, jnp.float32), (P, WDIM))
         pad = (-P) % chunk
         padded = {k: jnp.concatenate([v, jnp.repeat(v[:1], pad, axis=0)])
                   if pad else v for k, v in batch.items()}
 
         def score_chunk(c):
-            extras = {k: c[k] for k in ("edge_len", "_norms") if k in c}
+            extras = {k: c[k] for k in ("edge_len", "_norms", "_weights")
+                      if k in c}
 
             def one_full(w, e, m, a, ex):
                 out = one(w, e, m, a)
@@ -214,7 +227,8 @@ def make_scorer(layout: Layout, *, fw_impl=fw_counts_ref, chunk: int = 16,
                     sample = dict(out, edges=e, edge_mask=m, area=a, Vp=Vp)
                     if "edge_len" in ex:
                         sample["edge_len"] = ex["edge_len"]
-                    out["cost"] = cobj.cost_one(sample, ex["_norms"])
+                    out["cost"] = cobj.cost_one(sample, ex["_norms"],
+                                                ex["_weights"])
                 return out
 
             return jax.vmap(one_full)(c["W"], c["edges"], c["edge_mask"],
@@ -232,13 +246,13 @@ def make_ranker(scorer):
     """Fused in-scorer ranking: score a batch and select the ``k`` best
     placements (ascending cost) on device in one jitted call.  ``scorer``
     must have been built with an objective (it emits ``cost``).  Returns
-    ``rank(batch, norms, k, valid) -> (costs [k], indices [k])``; rows
-    where ``valid`` is False (e.g. the hetero Borůvka-component
+    ``rank(batch, norms, k, valid, weights) -> (costs [k], indices [k])``;
+    rows where ``valid`` is False (e.g. the hetero Borůvka-component
     connectivity rule, stricter than the scorer's FW reachability) rank
     last with infinite cost."""
     @functools.partial(jax.jit, static_argnames=("k",))
-    def rank(batch, norms, k: int = 1, valid=None):
-        out = scorer(batch, norms)
+    def rank(batch, norms, k: int = 1, valid=None, weights=None):
+        out = scorer(batch, norms, weights)
         cost = out["cost"]
         if valid is not None:
             cost = jnp.where(jnp.asarray(valid), cost, jnp.inf)

@@ -1,7 +1,7 @@
 """Named registries for the experiment API (optimizers, scorer backends,
-objective terms).
+objective terms, schedule ramps).
 
-The PlaceIT pipeline is pluggable at three seams:
+The PlaceIT pipeline is pluggable at four seams:
 
 * **optimizers** — search algorithms over a placement representation, all
   with the uniform signature ``(evaluator, rng, budget, params) -> OptResult``
@@ -14,6 +14,10 @@ The PlaceIT pipeline is pluggable at three seams:
   (paper §IV-B): the built-in ``lat`` / ``inv-thr`` / ``area`` terms plus
   penalty terms, composed into an ``objective.Objective`` and lowered into
   the jitted scorer by ``objective.compile_objective``.
+* **schedule ramps** — the shapes of constraint-hardening weight ramps
+  (``objective.Schedule``): built-in ``linear`` / ``cosine`` / ``step``,
+  with the uniform signature ``(t, start, end, params) -> scale`` over the
+  run's progress fraction ``t`` in [0, 1].
 
 Entries are registered with decorators::
 
@@ -91,6 +95,7 @@ class ObjectiveTermEntry:
 OPTIMIZERS = Registry("optimizer")
 SCORER_BACKENDS = Registry("scorer backend")
 OBJECTIVE_TERMS = Registry("objective term")
+SCHEDULE_RAMPS = Registry("schedule ramp")
 
 
 def register_optimizer(name: str, *, params_cls: type):
@@ -118,6 +123,16 @@ def register_objective_term(name: str, *, host_fn: Callable | None = None):
     ``host_fn`` for host-side reporting/equivalence paths."""
     def deco(fn):
         OBJECTIVE_TERMS.add(name, ObjectiveTermEntry(name, fn, host_fn))
+        return fn
+    return deco
+
+
+def register_schedule_ramp(name: str):
+    """Decorator: register a weight-ramp shape
+    ``fn(t, start, end, params) -> scale`` under ``name`` (``t`` is the
+    run's progress fraction in [0, 1]; see ``objective.Schedule``)."""
+    def deco(fn):
+        SCHEDULE_RAMPS.add(name, fn)
         return fn
     return deco
 

@@ -1,0 +1,53 @@
+"""Shared placement-batch invariant checks.
+
+Used by the property-based layer (``test_properties.py`` — randomized
+seeds via the optional-hypothesis shim) and the deterministic pipeline
+tests (``test_batched_pipeline.py``).  Expected chiplet counts are derived
+from the representation's arch, so the helpers work for any architecture.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.chiplets import COMPUTE, IO, MEMORY
+
+
+def counts_of(types):
+    return {k: int((np.asarray(types) == k).sum())
+            for k in (COMPUTE, MEMORY, IO)}
+
+
+def arch_counts(arch):
+    kinds = np.asarray(arch.kinds())
+    return {k: int((kinds == k).sum()) for k in (COMPUTE, MEMORY, IO)}
+
+
+def assert_valid_homog_batch(rep, t, r):
+    """Host-side invariants for a stacked [B, R, C] (types, rot) batch:
+    per-kind cell counts, zero rotation on non-rotatable cells, and PHYs
+    facing an occupied neighbor whenever one exists."""
+    want = arch_counts(rep.arch)
+    t, r = np.asarray(t), np.asarray(r)
+    for b in range(t.shape[0]):
+        assert counts_of(t[b]) == want
+        assert (r[b][t[b] == COMPUTE] == 0).all()
+        assert (r[b][t[b] < 0] == 0).all()
+        for rr in range(rep.R):
+            for cc in range(rep.C):
+                k = t[b, rr, cc]
+                if k >= 0 and rep._rotatable.get(int(k), False):
+                    occ = rep._occupied_dirs(t[b], rr, cc)
+                    if occ:    # PHY must face a chiplet when one exists
+                        assert int(r[b, rr, cc]) in occ
+
+
+def assert_valid_hetero_batch(rep, o, r):
+    """Host-side invariants for a stacked [B, N] (order, rots) batch:
+    per-kind counts (type-sequence validity) and per-kind non-isomorphic
+    rotation sets."""
+    want = arch_counts(rep.arch)
+    o, r = np.asarray(o), np.asarray(r)
+    for b in range(o.shape[0]):
+        assert counts_of(o[b]) == want
+        for k, rr in zip(o[b], r[b]):
+            assert int(rr) in rep._allowed_rot[int(k)]

@@ -1,0 +1,127 @@
+"""Regression tests for the cycle-level ICI simulator (``netsim``).
+
+``netsim`` was only exercised indirectly (through the trace benchmarks);
+these pin its two public workloads directly:
+
+* ``synthetic_packets`` — per-traffic-class rate accounting: sources and
+  destinations drawn from the right chiplet kinds, no self-pairs,
+  Bernoulli injection count tracking ``rate * n_cycles`` per source,
+  rate clipping at 1 packet/cycle, seeded determinism.
+* ``latency_throughput_curve`` — zero-load latency matching the routed
+  hop latency, saturation monotonicity (average latency does not
+  collapse as the injection rate grows, and diverges well past the
+  bottleneck-link saturation point).
+"""
+import numpy as np
+import pytest
+
+from repro.core.baseline import MeshBaseline
+from repro.core.chiplets import COMPUTE, IO, MEMORY, paper_arch
+from repro.core.netsim import (ROUTER_PIPELINE, ChipletNet, NetSim,
+                               latency_throughput_curve, synthetic_packets)
+
+KIND_OF = {"c": COMPUTE, "m": MEMORY, "i": IO}
+
+
+@pytest.fixture(scope="module")
+def net():
+    arch = paper_arch("homog32", "baseline")
+    _, geo, links = MeshBaseline(arch).build()
+    return arch, ChipletNet.from_links(arch, geo, links)
+
+
+# ---------------------------------------------------------------------------
+# synthetic_packets: per-class rate accounting.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("traffic", ["c2c", "c2m", "c2i", "m2i"])
+def test_synthetic_packets_class_accounting(net, traffic):
+    arch, cn = net
+    ks, kd = KIND_OF[traffic[0]], KIND_OF[traffic[2]]
+    n_src = int((cn.kinds == ks).sum())
+    rate, n_cycles = 0.05, 4000
+    pkts = synthetic_packets(cn, traffic, rate, n_cycles,
+                             np.random.default_rng(7))
+    assert pkts, "no packets generated"
+    for p in pkts:
+        assert cn.kinds[p.src] == ks
+        assert cn.kinds[p.dst] == kd
+        assert p.src != p.dst
+        assert 0 <= p.cycle < n_cycles
+        assert p.flits == 9                      # default data packet
+    # Bernoulli(n_cycles, rate) per source: mean n_src*rate*n_cycles, and
+    # a 5-sigma band on the total (self-pair drops only shave c2c a bit).
+    mean = n_src * rate * n_cycles
+    sigma = np.sqrt(n_src * n_cycles * rate * (1 - rate))
+    slack = mean / max((cn.kinds == kd).sum(), 1)   # dropped self pairs
+    assert mean - 5 * sigma - slack <= len(pkts) <= mean + 5 * sigma
+
+
+def test_synthetic_packets_rate_clips_at_one(net):
+    _, cn = net
+    n_cycles = 50
+    pkts = synthetic_packets(cn, "m2i", 3.0, n_cycles,
+                             np.random.default_rng(0))
+    n_src = int((cn.kinds == MEMORY).sum())
+    # rate is clipped to 1 packet/cycle/source
+    assert len(pkts) <= n_src * n_cycles
+
+
+def test_synthetic_packets_deterministic_under_seed(net):
+    _, cn = net
+    a = synthetic_packets(cn, "c2m", 0.1, 500, np.random.default_rng(3))
+    b = synthetic_packets(cn, "c2m", 0.1, 500, np.random.default_rng(3))
+    assert [(p.src, p.dst, p.cycle) for p in a] \
+        == [(p.src, p.dst, p.cycle) for p in b]
+
+
+# ---------------------------------------------------------------------------
+# latency_throughput_curve: zero-load latency + saturation monotonicity.
+# ---------------------------------------------------------------------------
+
+def test_zero_load_latency_matches_routed_hops(net):
+    arch, cn = net
+    sim = NetSim(cn, arch)
+    # a single packet: latency = hops * (d2d + pipeline) + relays * L_R
+    # + serialization (flits - 1), with no contention
+    srcs = np.nonzero(cn.kinds == COMPUTE)[0]
+    dsts = np.nonzero(cn.kinds == MEMORY)[0]
+    s, d = int(srcs[0]), int(dsts[-1])
+    from repro.core.netsim import Packet
+    res = sim.run([Packet(0, s, d, 9, 0)])
+    path = cn.path(s, d)
+    hops = len(path) - 1
+    want = hops * (arch.latency.d2d_cost() + ROUTER_PIPELINE) \
+        + (hops - 1) * arch.latency.l_relay + 9 - 1
+    assert res.n_done == 1
+    assert res.avg_latency == pytest.approx(want)
+
+
+def test_latency_throughput_curve_saturates_monotonically(net):
+    arch, cn = net
+    rates = [0.005, 0.02, 0.1, 0.4]
+    curve = latency_throughput_curve(cn, arch, "c2m", rates,
+                                     n_cycles=1500, seed=1)
+    assert [r for r, _ in curve] == rates
+    lats = np.array([lat for _, lat in curve])
+    assert np.isfinite(lats).all()
+    # low-load latency sits near the zero-load point; saturation blows up
+    assert lats[0] > 0
+    # monotone non-decreasing within a small tolerance for queue noise
+    assert (np.diff(lats) > -0.05 * lats[:-1]).all()
+    # far past saturation the average latency must clearly diverge
+    assert lats[-1] > 2.0 * lats[0]
+
+
+def test_curve_per_class_rates_are_independent(net):
+    """Each traffic class saturates against its own bottleneck: the curve
+    for a sparse class (m2i, 4 sources) stays much flatter at the same
+    per-source rate than the dense c2m class (32 sources)."""
+    arch, cn = net
+    r = [0.25]
+    (_, lat_c2m), = latency_throughput_curve(cn, arch, "c2m", r,
+                                             n_cycles=1200, seed=2)
+    (_, lat_m2i), = latency_throughput_curve(cn, arch, "m2i", r,
+                                             n_cycles=1200, seed=2)
+    assert np.isfinite(lat_c2m) and np.isfinite(lat_m2i)
+    assert lat_c2m > lat_m2i

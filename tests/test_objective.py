@@ -288,21 +288,34 @@ def test_topk_matches_host_order():
     assert ck[0] == costs[ik[0]] and set(ik) == set(order)
 
 
-def test_scorer_cache_keys_on_objective():
+def test_scorer_cache_keys_on_objective_structure():
     clear_scorer_cache()
     base = dict(arch="homog32", algorithms=("br",), budget=Budget(evals=4),
                 norm_samples=4, chunk=4)
     same = [ExperimentConfig(**base, seed=s) for s in (0, 1)]
     res = run_sweep(same)
     assert res.stats.scorers_built == 1         # shared across seeds
-    other = ExperimentConfig(**base, objective=Objective(
+    # Objective *weights* are runtime vectors: a mix-only change shares
+    # the compiled scorer AND the stacked scoring group (per-row weight
+    # vectors keep each run's costs exact) — the Pareto-grid fast path.
+    reweighted = ExperimentConfig(**base, objective=Objective(
         mix=TrafficMix(lat=(1, 1, 1, 1), thr=(1, 1, 1, 1))))
-    res2 = run_sweep([same[0], other])
+    res2 = run_sweep([same[0], reweighted])
+    assert res2.stats.scorers_built == 0        # same structure -> shared
+    assert res2.stats.stacked_groups == 1
+    # ... and the shared-scorer run is bit-for-bit the solo run
+    solo = run_experiment(reweighted)
+    assert res2.runs[1].records[0].result.best_cost \
+        == solo[0].result.best_cost
+    # a different term *structure* still forces a new compilation and
+    # never stacks with the default-structure runs
+    restructured = ExperimentConfig(**base, objective=Objective().with_terms(
+        TermSpec("link-length-cap", params={"cap_mm": 2.0})))
+    res3 = run_sweep([same[0], restructured])
     stats = scorer_cache_stats()
-    assert res2.stats.scorers_built == 1        # new objective -> new scorer
+    assert res3.stats.scorers_built == 1
+    assert res3.stats.stacked_groups == 0
     assert stats["misses"] == 2
-    # different objectives never share a stacked scoring group
-    assert res2.stats.stacked_groups == 0
 
 
 def test_termspec_accepts_string_and_bool_params():

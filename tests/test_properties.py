@@ -1,0 +1,195 @@
+"""Property-based tests for the device-resident pipeline.
+
+Randomized-seed invariants via the optional-hypothesis shim (``_hyp``):
+with hypothesis installed, ``@given`` draws seeds; without it, the same
+checks run over a deterministic seed sweep (so this layer never goes
+dark).  These replace the former hand-picked-seed operator spot checks in
+``test_batched_pipeline.py``.
+
+Covered properties:
+
+* ``HomogBatch`` / ``HeteroBatch`` operator invariants on randomized PRNG
+  keys — permutation validity (per-kind chiplet counts preserved by
+  random/mutate/merge), rotation ranges (non-isomorphic per-kind sets;
+  grid PHYs face occupied neighbors), merge carrying parent matches, and
+  PRNG determinism (same key -> identical batch, distinct keys -> change).
+* ``HeteroGraphBatch`` batched Borůvka vs the host Kruskal + union-find
+  on randomized corner placements: bit-for-bit W / D2D edge set / area /
+  component-derived ``connected``.
+"""
+import jax
+import numpy as np
+import pytest
+
+from _hyp import HAVE_HYPOTHESIS, given, settings, st
+from _invariants import assert_valid_hetero_batch, assert_valid_homog_batch
+
+from repro.core.chiplets import IO, MEMORY, paper_arch
+from repro.core.placement_hetero import HeteroRep
+from repro.core.placement_homog import HomogRep
+from repro.core.topology import HeteroGraphBatch
+
+ARCH = paper_arch("homog32", "baseline")
+HARCH = paper_arch("hetero32", "baseline")
+R, C = 8, 5
+B = 12          # batch size per drawn seed
+
+FALLBACK_SEEDS = [0, 3, 17, 255, 99991]
+MAXEX = 12      # hypothesis examples per property
+
+
+@pytest.fixture(scope="module")
+def rep():
+    return HomogRep(ARCH, R=R, C=C)
+
+
+@pytest.fixture(scope="module")
+def ops(rep):
+    return rep.batch_ops()
+
+
+@pytest.fixture(scope="module")
+def hrep():
+    return HeteroRep(HARCH)
+
+
+@pytest.fixture(scope="module")
+def hops(hrep):
+    return hrep.batch_ops()
+
+
+@pytest.fixture(scope="module")
+def hgb():
+    return HeteroGraphBatch(HARCH)
+
+
+# ---------------------------------------------------------------------------
+# Core property checks (shared by @given and the deterministic sweep).
+# ---------------------------------------------------------------------------
+
+def check_homog_ops(rep, ops, seed: int):
+    k0, k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 4)
+    t, r = ops.random_batch(k0, B)
+    assert t.dtype == np.int8 and t.shape == (B, R, C)
+    assert_valid_homog_batch(rep, t, r)
+    # PRNG determinism: same key -> identical batch
+    t2, r2 = ops.random_batch(k0, B)
+    assert np.array_equal(np.asarray(t), np.asarray(t2))
+    assert np.array_equal(np.asarray(r), np.asarray(r2))
+    # mutation keeps invariants and changes at least one placement
+    mt, mr = ops.mutate_batch(k1, t, r)
+    assert_valid_homog_batch(rep, mt, mr)
+    changed = (np.asarray(mt) != np.asarray(t)).any(axis=(1, 2)) \
+        | (np.asarray(mr) != np.asarray(r)).any(axis=(1, 2))
+    assert changed.any()
+    # merge keeps invariants and carries cells both parents agree on
+    tb, rb = ops.random_batch(k2, B)
+    tg, rg = ops.merge_batch(k3, t, r, tb, rb)
+    assert_valid_homog_batch(rep, tg, rg)
+    t_, tb_, tg_ = np.asarray(t), np.asarray(tb), np.asarray(tg)
+    r_, rb_, rg_ = np.asarray(r), np.asarray(rb), np.asarray(rg)
+    for b in range(B):
+        match = t_[b] == tb_[b]
+        assert (tg_[b][match] == t_[b][match]).all()
+        # carried rotations where both parents agree on type+rotation,
+        # for the single-PHY kinds (baseline memory/IO)
+        rot_match = match & (r_[b] == rb_[b]) & np.isin(t_[b], [MEMORY, IO])
+        assert (rg_[b][rot_match] == r_[b][rot_match]).all()
+
+
+def check_hetero_ops(hrep, hops, seed: int):
+    k0, k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 4)
+    o, r = hops.random_batch(k0, B)
+    assert o.dtype == np.int8
+    assert_valid_hetero_batch(hrep, o, r)
+    o2, r2 = hops.random_batch(k0, B)
+    assert np.array_equal(np.asarray(o), np.asarray(o2))
+    assert np.array_equal(np.asarray(r), np.asarray(r2))
+    mo, mr = hops.mutate_batch(k1, o, r)
+    assert_valid_hetero_batch(hrep, mo, mr)
+    changed = (np.asarray(mo) != np.asarray(o)).any(axis=1) \
+        | (np.asarray(mr) != np.asarray(r)).any(axis=1)
+    assert changed.any()
+    ob, rb = hops.random_batch(k2, B)
+    og, rg = hops.merge_batch(k3, o, r, ob, rb)
+    assert_valid_hetero_batch(hrep, og, rg)
+    o_, ob_, og_ = np.asarray(o), np.asarray(ob), np.asarray(og)
+    r_, rb_, rg_ = np.asarray(r), np.asarray(rb), np.asarray(rg)
+    for b in range(B):
+        match = o_[b] == ob_[b]
+        assert (og_[b][match] == o_[b][match]).all()
+        rmatch = match & (r_[b] == rb_[b])
+        assert (rg_[b][rmatch] == r_[b][rmatch]).all()
+
+
+def check_hetero_boruvka_matches_kruskal(hrep, hops, hgb, seed: int,
+                                         n: int = 6):
+    """Randomized placements: device Borůvka == host Kruskal bit-for-bit."""
+    import jax.numpy as jnp
+    rng = np.random.default_rng(seed)
+    sols = [hrep.random(rng) for _ in range(n)]
+    host = [hrep.score_graph(s) for s in sols]
+    ppos, area = hops.geometry_batch(np.stack([s[0] for s in sols]),
+                                     np.stack([s[1] for s in sols]))
+    batch = {k: np.asarray(v)
+             for k, v in hgb.build(jnp.asarray(ppos),
+                                   jnp.asarray(area)).items()}
+    assert not batch.pop("overflow").any()
+    for i, g in enumerate(host):
+        assert np.array_equal(batch["W"][i], g.W)
+        mine = {(int(u), int(v))
+                for (u, v), m in zip(batch["edges"][i],
+                                     batch["edge_mask"][i]) if m}
+        ref = {(int(u), int(v))
+               for (u, v), m in zip(g.edges, g.edge_mask) if m}
+        assert mine == ref
+        assert float(batch["area"][i]) == float(g.area)
+        assert bool(batch["connected"][i]) == g.connected
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis-drawn seeds (skipped individually when hypothesis is absent).
+# ---------------------------------------------------------------------------
+
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+@settings(max_examples=MAXEX, deadline=None)
+def test_homog_operator_invariants_property(rep, ops, seed):
+    check_homog_ops(rep, ops, seed)
+
+
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+@settings(max_examples=MAXEX, deadline=None)
+def test_hetero_operator_invariants_property(hrep, hops, seed):
+    check_hetero_ops(hrep, hops, seed)
+
+
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+@settings(max_examples=8, deadline=None)
+def test_hetero_boruvka_vs_kruskal_property(hrep, hops, hgb, seed):
+    check_hetero_boruvka_matches_kruskal(hrep, hops, hgb, seed)
+
+
+# ---------------------------------------------------------------------------
+# Deterministic seed sweep: the same properties when hypothesis is not
+# installed (the pinned environment), so the layer always runs.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.skipif(HAVE_HYPOTHESIS,
+                    reason="hypothesis drives the property above")
+@pytest.mark.parametrize("seed", FALLBACK_SEEDS)
+def test_homog_operator_invariants_seeds(rep, ops, seed):
+    check_homog_ops(rep, ops, seed)
+
+
+@pytest.mark.skipif(HAVE_HYPOTHESIS,
+                    reason="hypothesis drives the property above")
+@pytest.mark.parametrize("seed", FALLBACK_SEEDS)
+def test_hetero_operator_invariants_seeds(hrep, hops, seed):
+    check_hetero_ops(hrep, hops, seed)
+
+
+@pytest.mark.skipif(HAVE_HYPOTHESIS,
+                    reason="hypothesis drives the property above")
+@pytest.mark.parametrize("seed", FALLBACK_SEEDS)
+def test_hetero_boruvka_vs_kruskal_seeds(hrep, hops, hgb, seed):
+    check_hetero_boruvka_matches_kruskal(hrep, hops, hgb, seed)
