@@ -30,6 +30,8 @@ MODULES = [
                             "host loop (PR 2)"),
     ("pareto_frontier", "beyond-paper: device Pareto fronts + stacked "
                         "scalarization grids (PR 5)"),
+    ("design_service", "beyond-paper: continuous-batching design engine "
+                       "vs sequential runs (PR 6)"),
     ("kernels", "kernel micro-benches"),
     ("bridge_roofline", "beyond-paper: bridge co-design + roofline"),
 ]

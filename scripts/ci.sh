@@ -1,21 +1,27 @@
 #!/usr/bin/env sh
 # Tier-1 CI: fast test pass (slow-marked tests excluded) + quick bench
-# smokes for the pipeline-throughput and pareto-frontier benches (set
-# CI_SKIP_BENCH=1 to skip them).
+# smokes for the pipeline-throughput, pareto-frontier and design-service
+# benches (set CI_SKIP_BENCH=1 to skip them).
 #   scripts/ci.sh [extra pytest args...]
 #
 # Coverage: when pytest-cov is installed, the test pass also reports
-# line coverage for src/repro/core/ and enforces CI_COV_FLOOR
-# (default 0 = report-only on this first PR; once a baseline number is
-# measured in an environment with pytest-cov, pin it via CI_COV_FLOOR).
-# The pinned container has no pytest-cov/coverage, so the flags are
-# gated on importability rather than assumed.
+# line coverage for src/repro/core/ and enforces CI_COV_FLOOR.  When it
+# is NOT installed, coverage degrades *loudly*: a skip line is printed,
+# and a nonzero CI_COV_FLOOR (an explicit ask to enforce a floor) fails
+# the run instead of silently measuring nothing.
 set -eu
 cd "$(dirname "$0")/.."
 COV_ARGS=""
 if python -c "import pytest_cov" 2>/dev/null; then
     COV_ARGS="--cov=repro.core --cov-report=term \
 --cov-fail-under=${CI_COV_FLOOR:-0}"
+else
+    echo "ci.sh: pytest-cov unavailable, coverage skipped" >&2
+    if [ "${CI_COV_FLOOR:-0}" != "0" ]; then
+        echo "ci.sh: CI_COV_FLOOR=${CI_COV_FLOOR} set but pytest-cov is" \
+             "not importable; cannot enforce a coverage floor" >&2
+        exit 1
+    fi
 fi
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
     python -m pytest -q -m "not slow" $COV_ARGS "$@"
@@ -24,4 +30,6 @@ if [ "${CI_SKIP_BENCH:-0}" != "1" ]; then
         python -m benchmarks.run --only pipeline
     PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
         python -m benchmarks.run --only pareto
+    PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+        python -m benchmarks.run --only design_service
 fi

@@ -46,6 +46,7 @@ from typing import Any, Callable, Mapping
 import numpy as np
 
 from .baseline import MeshBaseline
+from .cache import LRUCache
 from .chiplets import ArchSpec, paper_arch
 from .objective import Objective, Schedule, TrafficMix
 from .optimize import (Evaluator, OptResult, best_random,
@@ -310,10 +311,15 @@ def make_rep(arch: ArchSpec, arch_name: str,
 
 # ---------------------------------------------------------------------------
 # Jitted-scorer cache: one compilation per (layout, chunk, backend,
-# objective *structure*).
+# objective *structure*) — bounded LRU so a long-lived service (the
+# design engine serves many tenants' structures) cannot leak compiled
+# executables.  Evictions are counted and surfaced through
+# scorer_cache_stats() / SweepStats.scorer_evictions.
 # ---------------------------------------------------------------------------
 
-_SCORER_CACHE: dict[tuple, Callable] = {}
+SCORER_CACHE_CAPACITY = 64
+
+_SCORER_CACHE: LRUCache = LRUCache(SCORER_CACHE_CAPACITY)
 _SCORER_STATS = {"hits": 0, "misses": 0}
 
 
@@ -342,11 +348,19 @@ def get_scorer(layout, *, chunk: int, backend: str,
 
 
 def scorer_cache_stats() -> dict:
-    return dict(_SCORER_STATS)
+    return dict(_SCORER_STATS, evictions=_SCORER_CACHE.evictions,
+                size=len(_SCORER_CACHE),
+                capacity=_SCORER_CACHE.capacity)
+
+
+def set_scorer_cache_capacity(n: int) -> None:
+    """Bound the compiled-scorer LRU (evicting down if needed)."""
+    _SCORER_CACHE.set_capacity(n)
 
 
 def clear_scorer_cache() -> None:
     _SCORER_CACHE.clear()
+    _SCORER_CACHE.evictions = 0
     _SCORER_STATS.update(hits=0, misses=0)
 
 
@@ -362,24 +376,26 @@ def make_evaluator(rep, arch: ArchSpec, *, rng: np.random.Generator,
                    backend: str = "fw-ref", fw_impl=None,
                    objective: Objective | None = None,
                    schedule: Schedule | None = None,
-                   norm=None) -> Evaluator:
+                   norm=None, archive_k: int = 0) -> Evaluator:
     """Evaluator wired to a named backend; raw ``fw_impl`` callables (the
     legacy hook) bypass the cache.  ``objective`` defaults to the default
     ``Objective`` built from the arch's (deprecated) ``w_*`` weights —
     i.e. the paper formula for paper archs.  ``schedule`` attaches
     constraint-hardening weight ramps; ``norm`` re-uses an existing
-    normalizer draw (see :class:`repro.core.optimize.Evaluator`)."""
+    normalizer draw (see :class:`repro.core.optimize.Evaluator`);
+    ``archive_k`` > 0 attaches a device-resident top-K population archive
+    (:class:`repro.core.optimize.PopArchive`)."""
     objective = (objective if objective is not None
                  else Objective.from_arch(arch))
     if fw_impl is not None:
         return Evaluator(rep, arch, rng=rng, norm_samples=norm_samples,
                          chunk=chunk, fw_impl=fw_impl, objective=objective,
-                         schedule=schedule, norm=norm)
+                         schedule=schedule, norm=norm, archive_k=archive_k)
     scorer = get_scorer(rep.layout, chunk=chunk, backend=backend,
                         objective=objective)
     return Evaluator(rep, arch, rng=rng, norm_samples=norm_samples,
                      chunk=chunk, scorer=scorer, objective=objective,
-                     schedule=schedule, norm=norm)
+                     schedule=schedule, norm=norm, archive_k=archive_k)
 
 
 # ---------------------------------------------------------------------------
@@ -412,6 +428,10 @@ class ExperimentConfig:
     # Constraint-hardening weight ramps over each run's progress
     # (repro.core.objective.Schedule); None = static weights.
     schedule: Schedule | None = None
+    # > 0 keeps a device-resident top-K archive of every evaluated
+    # (cost, placement) row (repro.core.optimize.PopArchive) — thickens
+    # Pareto fronts at no extra search cost.  0 = off (legacy behavior).
+    archive_k: int = 0
 
     def __post_init__(self):
         object.__setattr__(self, "algorithms", tuple(self.algorithms))
@@ -467,6 +487,7 @@ class ExperimentConfig:
             "objective": self.objective.to_dict(),
             "schedule": (None if self.schedule is None
                          else self.schedule.to_dict()),
+            "archive_k": self.archive_k,
         }
 
     @classmethod
@@ -541,7 +562,8 @@ def run_experiment(config: ExperimentConfig, *, fw_impl=None
                             norm_samples=config.norm_samples,
                             chunk=config.chunk, backend=config.backend,
                             fw_impl=fw_impl, objective=config.objective,
-                            schedule=config.schedule)
+                            schedule=config.schedule,
+                            archive_k=config.archive_k)
         for entry in entries:
             t0 = time.monotonic()
             rng_a = np.random.default_rng(
@@ -588,6 +610,8 @@ class SweepStats:
     seconds: float
     score_calls: int = 0       # scorer dispatches across the whole sweep
     stacked_groups: int = 0    # lockstep groups with >= 2 runs
+    scorer_evictions: int = 0  # compiled scorers dropped by the LRU
+    shard_devices: int = 1     # devices the population axis was split over
 
 
 @dataclass
@@ -620,6 +644,7 @@ class SweepConfig:
     pareto_grid: object | None = None      # pareto.ParetoGridSpec
     fold_repetitions: bool = True
     stack_scoring: bool = True
+    shard: bool = False                    # shard_map over the pop axis
 
     def __post_init__(self):
         object.__setattr__(self, "configs", tuple(
@@ -636,7 +661,8 @@ class SweepConfig:
                 "pareto_grid": (None if self.pareto_grid is None
                                 else self.pareto_grid.to_dict()),
                 "fold_repetitions": self.fold_repetitions,
-                "stack_scoring": self.stack_scoring}
+                "stack_scoring": self.stack_scoring,
+                "shard": self.shard}
 
     @classmethod
     def from_dict(cls, d: Mapping) -> "SweepConfig":
@@ -693,6 +719,116 @@ _SWEEP_STACKABLE = {
 }
 
 
+def stackable_steps(algo: str):
+    """Step-generator factory ``(ev, rng, budget, params) -> generator``
+    for a lockstep-stackable optimizer, or ``None`` if ``algo`` only runs
+    synchronously.  Public seam for the design service (serve.design)."""
+    return _SWEEP_STACKABLE.get(algo)
+
+
+# ---------------------------------------------------------------------------
+# Design-service request/response schema (engine: repro.serve.design).
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class DesignRequest:
+    """One tenant's placement-design request.
+
+    ``config`` is a normal :class:`ExperimentConfig`; with a
+    ``pareto_grid`` (:class:`repro.core.pareto.ParetoGridSpec`) it is
+    expanded into one run per grid scalarization and the streamed/final
+    results carry a Pareto front.  ``timeout_s`` is wall time measured
+    from admission; the engine resolves the request as ``"timeout"`` when
+    it expires mid-run.  Round-trips via to/from_dict.
+    """
+
+    config: ExperimentConfig
+    request_id: str = ""
+    pareto_grid: object | None = None      # pareto.ParetoGridSpec
+    timeout_s: float | None = None
+
+    def __post_init__(self):
+        if not isinstance(self.config, ExperimentConfig):
+            object.__setattr__(self, "config",
+                              ExperimentConfig.from_dict(self.config))
+        if self.pareto_grid is not None:
+            from .pareto import ParetoGridSpec
+            if not isinstance(self.pareto_grid, ParetoGridSpec):
+                object.__setattr__(self, "pareto_grid",
+                                  ParetoGridSpec.from_dict(self.pareto_grid))
+
+    def to_dict(self) -> dict:
+        return {"config": self.config.to_dict(),
+                "request_id": self.request_id,
+                "pareto_grid": (None if self.pareto_grid is None
+                                else self.pareto_grid.to_dict()),
+                "timeout_s": self.timeout_s}
+
+    @classmethod
+    def from_dict(cls, d: Mapping) -> "DesignRequest":
+        unknown = set(d) - {f.name for f in dataclasses.fields(cls)}
+        if unknown:
+            raise ValueError(f"unknown DesignRequest keys: "
+                             f"{sorted(unknown)}")
+        return cls(**dict(d))
+
+
+@dataclass
+class DesignUpdate:
+    """One streamed increment for a request.
+
+    ``kind`` is ``"progress"`` (a generation/round completed; carries the
+    best-so-far cost), ``"front"`` (partial Pareto front recomputed),
+    or a terminal ``"done"`` / ``"cancelled"`` / ``"timeout"`` /
+    ``"error"``.
+    """
+
+    request_id: str
+    kind: str
+    tick: int = 0                 # engine tick the update was emitted on
+    generation: int = 0           # scoring rounds completed for the request
+    best_cost: float | None = None
+    front: object | None = None   # pareto.ParetoFront (kind="front")
+    error: str | None = None
+
+    def to_dict(self) -> dict:
+        return {"request_id": self.request_id, "kind": self.kind,
+                "tick": self.tick, "generation": self.generation,
+                "best_cost": self.best_cost,
+                "front_size": (None if self.front is None
+                               else len(self.front.points)),
+                "error": self.error}
+
+
+@dataclass
+class DesignResponse:
+    """Terminal result for a request: the per-run records (same shape as
+    :func:`run_experiment` output), the final Pareto front when a grid or
+    archive produced one, and the stream of updates that led here."""
+
+    request_id: str
+    status: str                   # done | cancelled | timeout | error
+    records: list = field(default_factory=list)    # list[RunRecord]
+    front: object | None = None   # pareto.ParetoFront
+    updates: list = field(default_factory=list)    # list[DesignUpdate]
+    seconds: float = 0.0
+    error: str | None = None
+
+    @property
+    def best_cost(self) -> float | None:
+        costs = [r.result.best_cost for r in self.records
+                 if r.result is not None]
+        return min(costs) if costs else None
+
+    def to_dict(self) -> dict:
+        return {"request_id": self.request_id, "status": self.status,
+                "records": summarize(self.records),
+                "front_size": (None if self.front is None
+                               else len(self.front.points)),
+                "updates": [u.to_dict() for u in self.updates],
+                "seconds": self.seconds, "error": self.error}
+
+
 @dataclass
 class _SweepUnit:
     """One (config, algorithm, repetition) run inside a sweep."""
@@ -710,7 +846,8 @@ class _SweepUnit:
 
 
 def run_sweep(configs, *, fold_repetitions: bool = True,
-              stack_scoring: bool = True) -> SweepResult:
+              stack_scoring: bool = True, shard: bool = False
+              ) -> SweepResult:
     """Run many configs, amortizing compilation and normalization.
 
     ``configs`` may also be a :class:`SweepConfig`; with a ``pareto_grid``
@@ -752,6 +889,13 @@ def run_sweep(configs, *, fold_repetitions: bool = True,
     Because the Evaluator is shared, each record's ``n_generated`` is the
     number of placements generated *by that run* (a per-call delta), not
     the legacy cumulative counter.
+
+    With ``shard`` every stackable run (stacked groups *and* singletons)
+    routes its scoring through :func:`repro.sharding.population
+    .shard_scorer`, splitting the population axis across all local
+    devices with ``shard_map``.  On one device this is bit-for-bit
+    identical to the unsharded path (the wrapper runs the same per-row
+    computation); ``stats.shard_devices`` records the mesh size.
     """
     if isinstance(configs, SweepConfig):
         sc = configs
@@ -760,11 +904,12 @@ def run_sweep(configs, *, fold_repetitions: bool = True,
             return run_pareto_sweep(
                 sc.configs, sc.pareto_grid,
                 fold_repetitions=sc.fold_repetitions,
-                stack_scoring=sc.stack_scoring)
+                stack_scoring=sc.stack_scoring, shard=sc.shard)
         return run_sweep(sc.configs, fold_repetitions=sc.fold_repetitions,
-                         stack_scoring=sc.stack_scoring)
+                         stack_scoring=sc.stack_scoring, shard=sc.shard)
     t0 = time.monotonic()
     miss0 = _SCORER_STATS["misses"]
+    evict0 = _SCORER_CACHE.evictions
     # Normalizer draws depend only on (arch, config, seed, samples, chunk,
     # backend, mutation_mode, policy) — never on the objective's terms or
     # weights — so evaluators for different scalarizations of one base
@@ -777,7 +922,7 @@ def run_sweep(configs, *, fold_repetitions: bool = True,
         arch = paper_arch(cfg.arch, cfg.config)
         nkey = (cfg.arch, cfg.config, cfg.seed, cfg.norm_samples, cfg.chunk,
                 cfg.backend, cfg.mutation_mode, cfg.objective.normalizer)
-        key = nkey + (cfg.objective, cfg.schedule)
+        key = nkey + (cfg.objective, cfg.schedule, cfg.archive_k)
         if key not in ev_cache:
             rng = np.random.default_rng(cfg.seed)
             rep = make_rep(arch, cfg.arch, cfg.mutation_mode)
@@ -786,7 +931,8 @@ def run_sweep(configs, *, fold_repetitions: bool = True,
                 rep, arch, rng=rng, norm_samples=cfg.norm_samples,
                 chunk=cfg.chunk, backend=cfg.backend,
                 objective=cfg.objective, schedule=cfg.schedule,
-                norm=None if base is None else base.norm)
+                norm=None if base is None else base.norm,
+                archive_k=cfg.archive_k)
             if base is None:
                 norm_cache[nkey] = ev_cache[key]
         ev = ev_cache[key]
@@ -811,12 +957,23 @@ def run_sweep(configs, *, fold_repetitions: bool = True,
     # clock-budgeted runs never stack: interleaving would consume each
     # run's time budget with the whole group's work.
     groups: dict[int, list[_SweepUnit]] = {}
-    if stack_scoring:
+    if stack_scoring or shard:
         for u in units:
             if u.algo in _SWEEP_STACKABLE and u.budget.seconds is None:
                 groups.setdefault(id(u.ev.scorer), []).append(u)
-        groups = {k: v for k, v in groups.items() if len(v) > 1}
+        if not stack_scoring:       # shard-only: each run on its own
+            groups = {id(u): [u] for us in groups.values() for u in us}
+        elif not shard:             # stacking alone only pays off for >1
+            groups = {k: v for k, v in groups.items() if len(v) > 1}
     stacked = {id(u) for us in groups.values() for u in us}
+    stacked_groups = sum(1 for us in groups.values() if len(us) > 1)
+
+    shard_devices = 1
+    mesh = None
+    if shard:
+        from repro.sharding.population import n_pop_devices, population_mesh
+        mesh = population_mesh()
+        shard_devices = n_pop_devices(mesh)
 
     for us in groups.values():
         items = []
@@ -825,7 +982,12 @@ def run_sweep(configs, *, fold_repetitions: bool = True,
                 algo_seed(u.cfg.seed, max(u.rep_i, 0), u.algo))
             items.append((_SWEEP_STACKABLE[u.algo](u.ev, rng_a, u.budget,
                                                    u.params), u.ev))
-        results, gen_counts, run_secs = drive_stacked(items)
+        score_fn = None
+        if shard:
+            from repro.sharding.population import shard_scorer
+            score_fn = shard_scorer(us[0].ev.scorer, mesh)
+        results, gen_counts, run_secs = drive_stacked(items,
+                                                      score_fn=score_fn)
         for u, res, g, s in zip(us, results, gen_counts, run_secs):
             res.n_generated = g
             u.result, u.seconds = res, s
@@ -852,7 +1014,9 @@ def run_sweep(configs, *, fold_repetitions: bool = True,
                         for run in runs for r in run.records),
         seconds=time.monotonic() - t0,
         score_calls=sum(ev.n_score_calls for ev in ev_cache.values()),
-        stacked_groups=len(groups))
+        stacked_groups=stacked_groups,
+        scorer_evictions=_SCORER_CACHE.evictions - evict0,
+        shard_devices=shard_devices)
     return SweepResult(runs, stats)
 
 

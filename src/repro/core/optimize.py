@@ -54,6 +54,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .cache import LRUCache
 from .cost import CostNormalizers
 from .objective import (NORM_DIM, Objective, compile_schedule, norms_vec,
                         objective_cost_host, weights_vec)
@@ -74,6 +75,89 @@ class OptResult:
     n_generated: int = 0          # placements generated incl. retries
     n_evaluated: int = 0          # placements actually scored
     normalizers: CostNormalizers | None = None
+    # Snapshot of the evaluator's population archive at run end (see
+    # PopArchive.snapshot; None when the evaluator has no archive).  The
+    # archive is per-evaluator, so records sharing an evaluator carry
+    # increasingly complete snapshots — the last one is the full archive.
+    archive: dict | None = None
+
+
+# ---------------------------------------------------------------------------
+# Device-resident population archive (ROADMAP: thicker Pareto fronts at no
+# extra search cost).
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _archive_merge(sc, sa, sb, costs, a, b, k: int):
+    c = jnp.concatenate([sc, costs])
+    A = jnp.concatenate([sa, a])
+    B = jnp.concatenate([sb, b])
+    order = jnp.argsort(c)                     # stable: keeps first-seen
+    cs = c[order]
+    dup = jnp.concatenate(
+        [jnp.zeros((1,), bool), cs[1:] == cs[:-1]])
+    cs = jnp.where(dup, jnp.inf, cs)           # equal-cost rows collapse
+    keep = jnp.argsort(cs)[:k]
+    sel = order[keep]
+    return cs[keep], A[sel], B[sel]
+
+
+class PopArchive:
+    """Fixed-size top-K archive of evaluated (cost, placement) rows.
+
+    Every scored batch that passes through :meth:`add` is masked (invalid
+    rows -> +inf) and compacted against the current archive in one jitted
+    device call (concatenate + stable sort + equal-cost dedup + take-K),
+    so the archive rides along with the search at no extra scoring cost.
+    Pareto fronts built from a sweep then re-score these K placements next
+    to the per-run winners (``pareto.run_pareto_sweep``), thickening the
+    front beyond one point per run.
+
+    The scalar ``cost`` is only the archive's *selection pressure* — rows
+    are re-scored under the front's base objective before entering a
+    front, so mixing costs from different schedule-ramp stages merely
+    biases which K placements are retained, never the front itself.
+    Equal-cost rows are collapsed to the first seen (elites re-scored
+    every generation must not fill the archive with copies); distinct
+    placements with bit-equal costs are deliberately dropped too.
+    """
+
+    def __init__(self, k: int):
+        if k < 1:
+            raise ValueError(f"archive size must be >= 1, got {k}")
+        self.k = int(k)
+        self.n_added = 0
+        self._state = None
+
+    def add(self, costs, a, b, valid=None) -> None:
+        """Fold a scored batch into the archive.  ``a``/``b`` are the
+        stacked placement arrays ([B, ...]; the host Sol tuple's two
+        members), ``costs`` the matching [B] cost vector, ``valid`` an
+        optional [B] bool mask (e.g. batched-pipeline connectivity)."""
+        costs = jnp.asarray(np.asarray(costs), jnp.float32)
+        if valid is not None:
+            costs = jnp.where(jnp.asarray(np.asarray(valid), bool),
+                              costs, jnp.inf)
+        a, b = jnp.asarray(a), jnp.asarray(b)
+        if self._state is None:
+            self._state = (
+                jnp.full((self.k,), jnp.inf, jnp.float32),
+                jnp.zeros((self.k,) + a.shape[1:], a.dtype),
+                jnp.zeros((self.k,) + b.shape[1:], b.dtype))
+        sc, sa, sb = self._state
+        self._state = _archive_merge(sc, sa, sb, costs, a, b, self.k)
+        self.n_added += int(costs.shape[0])
+
+    def snapshot(self) -> dict | None:
+        """Host copy of the filled rows: ``{"costs", "a", "b"}`` arrays
+        (ascending cost), or None when nothing was archived."""
+        if self._state is None:
+            return None
+        c, a, b = (np.asarray(x) for x in self._state)
+        m = np.isfinite(c)
+        if not m.any():
+            return None
+        return {"costs": c[m], "a": a[m], "b": b[m]}
 
 
 class Evaluator:
@@ -98,7 +182,8 @@ class Evaluator:
     def __init__(self, rep, arch, *, rng: np.random.Generator,
                  norm_samples: int = 500, chunk: int = 16, fw_impl=None,
                  scorer=None, objective: Objective | None = None,
-                 schedule=None, norm: CostNormalizers | None = None):
+                 schedule=None, norm: CostNormalizers | None = None,
+                 archive_k: int = 0):
         self.rep = rep
         self.arch = arch
         self.objective = (objective if objective is not None
@@ -118,20 +203,25 @@ class Evaluator:
         self.n_score_calls = 0
         self._pipeline: "DevicePipeline | None" = None
         self._ranker = None
+        # The archive only collects search batches, never the norm-sample
+        # draw below (those costs are computed against all-ones norms).
+        self.archive: PopArchive | None = None
         if norm is not None:
             self.norm = norm
             self._norm_vec = norms_vec(self.norm)
-            return
-        # Norm-sample draws are scored before normalizers exist; the
-        # device cost of those calls is computed against all-ones norms
-        # and never consumed.
-        self._norm_vec = np.ones(NORM_DIM, np.float32)
-        sols, graphs = self.generate_valid(
-            lambda r: self.rep.random(r), rng, norm_samples)
-        metrics = self.score(graphs)
-        self.norm = CostNormalizers.from_samples(
-            metrics, policy=self.objective.normalizer)
-        self._norm_vec = norms_vec(self.norm)
+        else:
+            # Norm-sample draws are scored before normalizers exist; the
+            # device cost of those calls is computed against all-ones norms
+            # and never consumed.
+            self._norm_vec = np.ones(NORM_DIM, np.float32)
+            sols, graphs = self.generate_valid(
+                lambda r: self.rep.random(r), rng, norm_samples)
+            metrics = self.score(graphs)
+            self.norm = CostNormalizers.from_samples(
+                metrics, policy=self.objective.normalizer)
+            self._norm_vec = norms_vec(self.norm)
+        if archive_k:
+            self.archive = PopArchive(archive_k)
 
     @property
     def norm_vec(self) -> np.ndarray:
@@ -177,16 +267,29 @@ class Evaluator:
     def score(self, graphs: list[ScoreGraph]) -> dict:
         return self.score_batch(stack_graphs(graphs))
 
-    def score_batch(self, batch: dict, norms=None, weights=None) -> dict:
+    def score_batch(self, batch: dict, norms=None, weights=None,
+                    fn=None) -> dict:
         """Score pre-stacked (host or device) ScoreGraph arrays.  ``norms``
         / ``weights`` override the evaluator's normalizer / objective
         weight vectors (e.g. per-row vectors in stacked cross-run scoring,
-        or a schedule's ramped weights)."""
+        or a schedule's ramped weights).  ``fn`` substitutes the scorer
+        call itself — e.g. a population-sharded wrapper from
+        :func:`repro.sharding.population.shard_scorer` — while keeping
+        the evaluator's dispatch accounting."""
         self.n_score_calls += 1
-        out = self.scorer(batch,
-                          self._norm_vec if norms is None else norms,
-                          self._weights_vec if weights is None else weights)
+        out = (fn or self.scorer)(
+            batch,
+            self._norm_vec if norms is None else norms,
+            self._weights_vec if weights is None else weights)
         return {k: np.asarray(v) for k, v in out.items()}
+
+    def archive_add(self, sols, costs, valid=None) -> None:
+        """Fold scored host solutions into the population archive (no-op
+        without one); sols are the representation's ``(a, b)`` tuples."""
+        if self.archive is None or not len(sols):
+            return
+        self.archive.add(costs, np.stack([s[0] for s in sols]),
+                         np.stack([s[1] for s in sols]), valid=valid)
 
     def costs_from(self, metrics: dict) -> np.ndarray:
         """Per-placement cost — the scorer's in-jit ``cost`` when present
@@ -326,6 +429,7 @@ def best_random_steps(ev: Evaluator, rng: np.random.Generator, *,
         w = ev.sched_weights(_sched_progress(res.n_evaluated, max_evals,
                                              t0, time_budget_s))
         costs, metrics = yield _tag(graphs, w)
+        ev.archive_add(sols, costs)
         res.n_evaluated += len(sols)
         i = int(np.argmin(costs))
         if ev.schedule is not None:
@@ -347,6 +451,8 @@ def best_random_steps(ev: Evaluator, rng: np.random.Generator, *,
                             res.best_cost))
     res.n_generated = ev.n_generated
     res.normalizers = ev.norm
+    if ev.archive is not None:
+        res.archive = ev.archive.snapshot()
     return res
 
 
@@ -382,6 +488,7 @@ def genetic_algorithm_steps(ev: Evaluator, rng: np.random.Generator, *,
         w = ev.sched_weights(_sched_progress(gen, max_generations, t0,
                                              time_budget_s))
         costs, metrics = yield _tag(graphs, w)
+        ev.archive_add(sols, costs)
         res.n_evaluated += len(sols)
         order = np.argsort(costs)
         if costs[order[0]] < res.best_cost:
@@ -427,6 +534,8 @@ def genetic_algorithm_steps(ev: Evaluator, rng: np.random.Generator, *,
                             res.best_cost))
     res.n_generated = ev.n_generated
     res.normalizers = ev.norm
+    if ev.archive is not None:
+        res.archive = ev.archive.snapshot()
     return res
 
 
@@ -486,6 +595,7 @@ def simulated_annealing_steps(ev: Evaluator, rng: np.random.Generator, *,
     tstart = time.monotonic()
     sols, graphs = ev.generate_valid(ev.rep.random, rng, chains)
     costs, metrics = yield _tag(graphs, ev.sched_weights(0.0))
+    ev.archive_add(sols, costs)
     res.n_evaluated += chains
     temps = np.full(chains, float(t0_temp))
     block_costs: list[np.ndarray] = []
@@ -518,6 +628,7 @@ def simulated_annealing_steps(ev: Evaluator, rng: np.random.Generator, *,
             nb_costs = all_costs[:chains]
             costs = all_costs[chains:]
             nb_metrics = {k: v[:chains] for k, v in nb_metrics.items()}
+        ev.archive_add(nb_sols, nb_costs)
         res.n_evaluated += chains
         accept = _sa_accept(rng, nb_costs - costs, temps)
         for c in range(chains):
@@ -546,6 +657,8 @@ def simulated_annealing_steps(ev: Evaluator, rng: np.random.Generator, *,
                             res.best_cost))
     res.n_generated = ev.n_generated
     res.normalizers = ev.norm
+    if ev.archive is not None:
+        res.archive = ev.archive.snapshot()
     return res
 
 
@@ -590,10 +703,13 @@ class DevicePipeline:
     The jitted produce→graph stages only depend on the arch statics
     (grid dims, mutation mode), so — like the jitted scorer behind
     ``api.get_scorer`` — they are cached module-wide per arch and shared by
-    every Evaluator over the same arch instead of re-traced per run.
+    every Evaluator over the same arch instead of re-traced per run.  The
+    cache is a bounded LRU (long-lived services must not leak compiled
+    stages); live pipelines hold their own stage references, so eviction
+    only drops the shared cache entry.
     """
 
-    _STAGE_CACHE: dict = {}
+    _STAGE_CACHE: LRUCache = LRUCache(32)
 
     @classmethod
     def clear_stage_cache(cls) -> None:
@@ -736,6 +852,8 @@ class DevicePipeline:
         metrics = {k: np.array(v) for k, v in metrics.items()}
         self.ev.n_generated += n
         conn = metrics["connected"].astype(bool)
+        if self.ev.archive is not None:
+            self.ev.archive.add(costs, t, r, valid=conn)
         for _ in range(max_rounds):
             bad = np.nonzero(~conn)[0]
             if not len(bad):
@@ -747,6 +865,8 @@ class DevicePipeline:
             c2, m2 = yield _tag(batch2, weights)
             self.ev.n_generated += size
             conn2 = np.asarray(m2["connected"]).astype(bool)
+            if self.ev.archive is not None:
+                self.ev.archive.add(np.asarray(c2), t2, r2, valid=conn2)
             slots, rows = [], []
             for i in range(size):
                 s = int(idx[i])
@@ -854,6 +974,8 @@ def best_random_batched_steps(ev: Evaluator, rng: np.random.Generator, *,
                             res.best_cost))
     res.n_generated = ev.n_generated
     res.normalizers = ev.norm
+    if ev.archive is not None:
+        res.archive = ev.archive.snapshot()
     return res
 
 
@@ -940,6 +1062,8 @@ def genetic_algorithm_batched_steps(ev: Evaluator,
                             res.best_cost))
     res.n_generated = ev.n_generated
     res.normalizers = ev.norm
+    if ev.archive is not None:
+        res.archive = ev.archive.snapshot()
     return res
 
 
@@ -1027,6 +1151,8 @@ def simulated_annealing_batched_steps(ev: Evaluator,
                             res.best_cost))
     res.n_generated = ev.n_generated
     res.normalizers = ev.norm
+    if ev.archive is not None:
+        res.archive = ev.archive.snapshot()
     return res
 
 
@@ -1050,7 +1176,61 @@ def simulated_annealing_batched(ev: Evaluator, rng: np.random.Generator, *,
 # Stacked execution of step generators (run_sweep cross-config batching).
 # ---------------------------------------------------------------------------
 
-def drive_stacked(items: list) -> tuple[list, list[int], list[float]]:
+def score_stacked(entries: list, *, score_fn=None
+                  ) -> tuple[list, float]:
+    """One stacked scoring round: concatenate several runs' pending
+    scoring requests into a single batched scorer call with per-row
+    normalizer and weight vectors, and split the results back.
+
+    ``entries`` is a list of ``(parts, evaluator)`` pairs where ``parts``
+    is the :func:`_request_parts` normalization of one scoring request;
+    all evaluators must share one compiled scorer (same layout / chunk /
+    backend / objective structure).  ``score_fn`` substitutes the scorer
+    call — e.g. a population-sharded wrapper from
+    :func:`repro.sharding.population.shard_scorer` — for the whole
+    stacked batch.  Returns ``(per_entry, t_score)`` with ``per_entry[i]
+    = (costs, metrics)`` for entry ``i`` (per-request ``connected``
+    overrides restored, costs via each run's own evaluator).
+
+    This is the preemptible core both :func:`drive_stacked` (whole sweeps
+    run to completion) and the design service's tick loop
+    (``repro.serve.design`` — requests interleaved at arbitrary
+    generations) are built on.
+    """
+    sizes = [p[2] for p, _ in entries]
+    keys = sorted(entries[0][0][0])
+    for j, (p, _) in enumerate(entries[1:], start=1):
+        if sorted(p[0]) != keys:    # fail loudly on heterogeneous requests
+            raise ValueError(
+                f"stacked scoring requests disagree on batch keys: entry "
+                f"0 has {keys}, entry {j} has {sorted(p[0])}")
+    cat = {k: jnp.concatenate([jnp.asarray(p[0][k]) for p, _ in entries])
+           for k in keys}
+    norms = np.concatenate(
+        [np.broadcast_to(ev.norm_vec, (sz, NORM_DIM))
+         for (p, ev), sz in zip(entries, sizes)])
+    weights = np.concatenate(
+        [np.broadcast_to(np.asarray(
+            ev.weights_vec if p[3] is None else p[3], np.float32),
+            (sz, ev.weights_vec.shape[0]))
+         for (p, ev), sz in zip(entries, sizes)])
+    ts = time.monotonic()
+    metrics = entries[0][1].score_batch(cat, norms=norms, weights=weights,
+                                        fn=score_fn)
+    t_score = time.monotonic() - ts
+    out = []
+    off = 0
+    for (p, ev), sz in zip(entries, sizes):
+        mi = {k: v[off:off + sz] for k, v in metrics.items()}
+        if p[1] is not None:                   # per-request conn override
+            mi["connected"] = np.asarray(p[1])
+        off += sz
+        out.append((ev.costs_from(mi), mi))
+    return out, t_score
+
+
+def drive_stacked(items: list, *, score_fn=None
+                  ) -> tuple[list, list[int], list[float]]:
     """Run several step-generators in lockstep, stacking each round's
     scoring requests into one batched scorer call.
 
@@ -1066,7 +1246,9 @@ def drive_stacked(items: list) -> tuple[list, list[int], list[float]]:
     run), splits the metrics back (restoring per-request ``connected``
     overrides), and resumes the generators.  Results are bit-for-bit
     identical to driving each generator alone (the scorer is vmapped
-    elementwise), with ~k fewer dispatches.
+    elementwise), with ~k fewer dispatches.  ``score_fn`` routes every
+    stacked call through a substitute scorer (see :func:`score_stacked`),
+    e.g. the population-axis ``shard_map`` wrapper.
 
     Returns ``(results, n_generated, seconds)`` aligned with ``items`` —
     ``n_generated[i]`` is the number of placements generated by run ``i``
@@ -1101,37 +1283,11 @@ def drive_stacked(items: list) -> tuple[list, list[int], list[float]]:
         parts = {i: reqs[i] for i in order}
         reqs = {}
         sizes = [parts[i][2] for i in order]
-        keys = sorted(parts[order[0]][0])
-        for i in order[1:]:         # fail loudly on heterogeneous requests
-            if sorted(parts[i][0]) != keys:
-                raise ValueError(
-                    f"stacked scoring requests disagree on batch keys: run "
-                    f"{order[0]} has {keys}, run {i} has "
-                    f"{sorted(parts[i][0])}")
-        cat = {k: jnp.concatenate([jnp.asarray(parts[i][0][k])
-                                   for i in order]) for k in keys}
-        norms = np.concatenate(
-            [np.broadcast_to(items[i][1].norm_vec, (sz, NORM_DIM))
-             for i, sz in zip(order, sizes)])
-        weights = np.concatenate(
-            [np.broadcast_to(np.asarray(
-                items[i][1].weights_vec if parts[i][3] is None
-                else parts[i][3], np.float32),
-                (sz, items[i][1].weights_vec.shape[0]))
-             for i, sz in zip(order, sizes)])
-        ts = time.monotonic()
-        metrics = items[order[0]][1].score_batch(cat, norms=norms,
-                                                 weights=weights)
-        t_score = time.monotonic() - ts
+        per_entry, t_score = score_stacked(
+            [(parts[i], items[i][1]) for i in order], score_fn=score_fn)
         total = max(sum(sizes), 1)
-        off = 0
-        for i, sz in zip(order, sizes):
-            mi = {k: v[off:off + sz] for k, v in metrics.items()}
-            if parts[i][1] is not None:        # per-request conn override
-                mi["connected"] = np.asarray(parts[i][1])
-            off += sz
+        for i, sz, (ci, mi) in zip(order, sizes, per_entry):
             secs[i] += t_score * (sz / total)
-            ci = items[i][1].costs_from(mi)
             _resume(i, (ci, mi))
     return results, gen_counts, secs
 

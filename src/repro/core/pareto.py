@@ -343,10 +343,154 @@ class ParetoFront:
 # The sweep engine.
 # ---------------------------------------------------------------------------
 
-def compute_front(base_cfg, entries, *, ref_point=None) -> ParetoFront:
+@dataclass
+class FrontCandidate:
+    """One placement proposed for a front, with provenance.
+
+    ``sol`` is the representation's ``(a, b)`` solution pair;
+    ``normalizers`` (optional) carries a run's normalizer draw so the
+    front's evaluator reuses it instead of re-generating ``norm_samples``
+    placements (first candidate that has one wins).
+    """
+
+    label: str
+    cfg_index: int
+    algorithm: str
+    repetition: int
+    objective: Objective
+    cost: float
+    sol: tuple
+    normalizers: object | None = None
+
+
+def candidates_from_records(entries) -> list[FrontCandidate]:
+    """``(label, cfg_index, objective, RunRecord)`` tuples (the
+    :func:`compute_front` input shape) -> best-placement candidates."""
+    return [FrontCandidate(
+        label=label, cfg_index=int(cfg_i), algorithm=rec.algorithm,
+        repetition=rec.repetition, objective=obj,
+        cost=float(rec.result.best_cost), sol=rec.result.best_sol,
+        normalizers=rec.result.normalizers)
+        for label, cfg_i, obj, rec in entries]
+
+
+def archive_candidates(label: str, cfg_index: int, objective: Objective,
+                       archive: Mapping, *, normalizers=None
+                       ) -> list[FrontCandidate]:
+    """Candidates from a :class:`repro.core.optimize.PopArchive` snapshot
+    (``{"costs", "a", "b"}``) — every retained top-K row becomes one
+    candidate tagged ``algorithm="archive"``, ``repetition=-1``."""
+    costs = np.asarray(archive["costs"])
+    return [FrontCandidate(
+        label=f"{label}|archive", cfg_index=cfg_index,
+        algorithm="archive", repetition=-1, objective=objective,
+        cost=float(costs[i]),
+        sol=(np.asarray(archive["a"][i]), np.asarray(archive["b"][i])),
+        normalizers=normalizers)
+        for i in range(costs.shape[0])]
+
+
+class IncrementalFront:
+    """A Pareto front that grows as candidates stream in.
+
+    Each :meth:`add` re-scores only the *new* candidates (one stacked
+    scorer call under the base objective), appends their rows to the
+    running cost matrix, and recomputes the non-dominated mask over
+    everything seen so far — the design service calls this per tick to
+    stream partial fronts.  A single ``add`` of all candidates produces
+    exactly :func:`compute_front`'s output (pinned by tests).
+    """
+
+    def __init__(self, base_cfg, *, ref_point=None):
+        self.base_cfg = base_cfg
+        self.ref_point = ref_point
+        self._arch = paper_arch(base_cfg.arch, base_cfg.config)
+        self._rep = make_rep(self._arch, base_cfg.arch,
+                             base_cfg.mutation_mode)
+        self._ev = None                       # built on first add
+        self._cands: list[FrontCandidate] = []
+        self._rows: list[dict] = []           # per-candidate raw metrics
+        self._Y: np.ndarray | None = None
+
+    @property
+    def n_candidates(self) -> int:
+        return len(self._cands)
+
+    def add(self, cands) -> ParetoFront:
+        """Score ``cands`` (list of :class:`FrontCandidate`), fold them
+        into the front, and return the updated :class:`ParetoFront`."""
+        cands = list(cands)
+        if not cands:
+            return self.front()
+        if self._ev is None:
+            # Reuse a run's normalizer draw (carried on every OptResult)
+            # so the matrix is normalized exactly like in-run costs — and
+            # the (hetero-expensive) norm_samples draw is not paid twice.
+            norm = next((c.normalizers for c in cands
+                         if c.normalizers is not None), None)
+            self._ev = make_evaluator(
+                self._rep, self._arch,
+                rng=np.random.default_rng(self.base_cfg.seed),
+                norm_samples=self.base_cfg.norm_samples,
+                chunk=self.base_cfg.chunk, backend=self.base_cfg.backend,
+                objective=self.base_cfg.objective, norm=norm)
+        graphs = [self._rep.score_graph(c.sol) for c in cands]
+        batch = stack_graphs(graphs)
+        metrics = self._ev.score_batch(batch)    # one stacked device call
+        Y = term_matrix(metrics, batch, self.base_cfg.objective,
+                        self._ev.norm, self._rep.layout.Vp)
+        keys = [k for k in metrics if k not in ("cost", "connected")]
+        self._rows.extend({k: float(metrics[k][i]) for k in keys}
+                          for i in range(len(cands)))
+        self._cands.extend(cands)
+        self._Y = Y if self._Y is None else np.concatenate([self._Y, Y])
+        return self.front()
+
+    def front(self) -> ParetoFront:
+        """The current front over everything added so far."""
+        base_cfg = self.base_cfg
+        term_names = tuple(t.name for t in base_cfg.objective.terms)
+        if self._Y is None:
+            return ParetoFront(
+                arch=base_cfg.arch, config=base_cfg.config,
+                term_names=term_names, ref_point=(), hypervolume=0.0,
+                points=(), n_candidates=0)
+        Y = self._Y
+        mask = nondominated_mask(Y)
+        if self.ref_point is None:
+            span = Y.max(axis=0) - Y.min(axis=0)
+            ref = Y.max(axis=0) + 0.05 * np.maximum(span, 1.0)
+        else:
+            ref = np.asarray(self.ref_point, np.float64)
+        hv = hypervolume(Y[mask], ref)
+        points = []
+        for i in np.nonzero(mask)[0]:
+            c = self._cands[int(i)]
+            a, b = c.sol
+            points.append(ParetoPoint(
+                label=c.label, cfg_index=c.cfg_index,
+                algorithm=c.algorithm, repetition=c.repetition,
+                objective=c.objective, cost=c.cost,
+                terms=tuple(float(x) for x in Y[i]),
+                metrics=dict(self._rows[int(i)]),
+                placement={"types": np.asarray(a).tolist(),
+                           "rots": np.asarray(b).tolist()}))
+        order = np.argsort([p.terms[0] for p in points], kind="stable")
+        points = tuple(points[int(i)] for i in order)
+        return ParetoFront(
+            arch=base_cfg.arch, config=base_cfg.config,
+            term_names=term_names, ref_point=tuple(float(x) for x in ref),
+            hypervolume=float(hv), points=points,
+            n_candidates=len(self._cands),
+            matrix=tuple(tuple(float(x) for x in r) for r in Y))
+
+
+def compute_front(base_cfg, entries, *, ref_point=None,
+                  extra_candidates=()) -> ParetoFront:
     """Front over ``entries`` = ``(label, cfg_index, objective,
     RunRecord)`` tuples (``objective`` is the scalarization that produced
-    the record).
+    the record), plus optional pre-built ``extra_candidates``
+    (:class:`FrontCandidate`, e.g. population-archive rows).
 
     Re-scores every record's best placement in one stacked scorer call
     (device; base-config evaluator, shared scorer-cache entry), builds the
@@ -354,55 +498,14 @@ def compute_front(base_cfg, entries, *, ref_point=None) -> ParetoFront:
     non-dominated rows on device and reports the exact hypervolume vs
     ``ref_point`` (default: 5% beyond the per-term candidate maximum).
     """
-    arch = paper_arch(base_cfg.arch, base_cfg.config)
-    rep = make_rep(arch, base_cfg.arch, base_cfg.mutation_mode)
-    # Reuse the sweep's normalizer draw (carried on every OptResult) so
-    # the matrix is normalized exactly like the in-run costs — and the
-    # (hetero-expensive) norm_samples generation is not paid twice.
-    norm = next((rec.result.normalizers for _, _, _, rec in entries
-                 if rec.result.normalizers is not None), None)
-    ev = make_evaluator(rep, arch, rng=np.random.default_rng(base_cfg.seed),
-                        norm_samples=base_cfg.norm_samples,
-                        chunk=base_cfg.chunk, backend=base_cfg.backend,
-                        objective=base_cfg.objective, norm=norm)
-    graphs = [rep.score_graph(rec.result.best_sol)
-              for _, _, _, rec in entries]
-    batch = stack_graphs(graphs)
-    metrics = ev.score_batch(batch)          # one stacked device call
-    Y = term_matrix(metrics, batch, base_cfg.objective, ev.norm,
-                    rep.layout.Vp)
-    mask = nondominated_mask(Y)
-    if ref_point is None:
-        span = Y.max(axis=0) - Y.min(axis=0)
-        ref = Y.max(axis=0) + 0.05 * np.maximum(span, 1.0)
-    else:
-        ref = np.asarray(ref_point, np.float64)
-    hv = hypervolume(Y[mask], ref)
-    metric_keys = [k for k in metrics if k not in ("cost", "connected")]
-    points = []
-    for i in np.nonzero(mask)[0]:
-        label, cfg_i, obj, rec = entries[int(i)]
-        a, b = rec.result.best_sol
-        points.append(ParetoPoint(
-            label=label, cfg_index=int(cfg_i), algorithm=rec.algorithm,
-            repetition=rec.repetition, objective=obj,
-            cost=float(rec.result.best_cost),
-            terms=tuple(float(x) for x in Y[i]),
-            metrics={k: float(metrics[k][i]) for k in metric_keys},
-            placement={"types": np.asarray(a).tolist(),
-                       "rots": np.asarray(b).tolist()}))
-    order = np.argsort([p.terms[0] for p in points], kind="stable")
-    points = tuple(points[int(i)] for i in order)
-    return ParetoFront(
-        arch=base_cfg.arch, config=base_cfg.config,
-        term_names=tuple(t.name for t in base_cfg.objective.terms),
-        ref_point=tuple(float(x) for x in ref),
-        hypervolume=float(hv), points=points, n_candidates=len(entries),
-        matrix=tuple(tuple(float(x) for x in r) for r in Y))
+    inc = IncrementalFront(base_cfg, ref_point=ref_point)
+    return inc.add(candidates_from_records(entries)
+                   + list(extra_candidates))
 
 
 def run_pareto_sweep(base_configs, grid, *, fold_repetitions: bool = True,
-                     stack_scoring: bool = True, ref_point=None):
+                     stack_scoring: bool = True, shard: bool = False,
+                     ref_point=None):
     """Expand every base config over ``grid``, run one stacked sweep, and
     attach a :class:`ParetoFront` per base config.
 
@@ -412,6 +515,11 @@ def run_pareto_sweep(base_configs, grid, *, fold_repetitions: bool = True,
     objective's term structure, the whole grid shares one jitted scorer
     and executes in ``drive_stacked`` lockstep — the per-row runtime
     weight vectors keep every scalarization's in-scorer costs exact.
+
+    When configs carry ``archive_k`` > 0, each run's device-resident
+    population archive (top-K of *every* evaluated placement) feeds extra
+    front candidates (``algorithm="archive"``), thickening the front at
+    no extra search cost.  ``shard`` forwards to :func:`run_sweep`.
     """
     grid = ParetoGridSpec.from_dict(grid) \
         if not isinstance(grid, ParetoGridSpec) else grid
@@ -423,16 +531,35 @@ def run_pareto_sweep(base_configs, grid, *, fold_repetitions: bool = True,
             prov.append((b_i, label, obj))
             expanded.append(dataclasses.replace(cfg, objective=obj))
     sweep = run_sweep(expanded, fold_repetitions=fold_repetitions,
-                      stack_scoring=stack_scoring)
+                      stack_scoring=stack_scoring, shard=shard)
     fronts = []
     for b_i, cfg in enumerate(base_configs):
-        entries = []
+        entries, extras, seen = [], [], set()
         for i, run in enumerate(sweep.runs):
             if prov[i][0] != b_i:
                 continue
             for rec in run.records:
                 entries.append((prov[i][1], i, prov[i][2], rec))
-        fronts.append(compute_front(cfg, entries, ref_point=ref_point))
+            # The archive is per-evaluator (shared by a run's records);
+            # the run's *last* snapshot is the cumulative archive.  Runs
+            # sharing an evaluator would re-emit identical rows, so dedup
+            # snapshots by content.
+            snap = next((rec.result.archive for rec in
+                         reversed(run.records)
+                         if rec.result.archive is not None), None)
+            if snap is not None:
+                key = np.asarray(snap["costs"]).tobytes()
+                if key not in seen:
+                    seen.add(key)
+                    norm = next((rec.result.normalizers
+                                 for rec in run.records
+                                 if rec.result.normalizers is not None),
+                                None)
+                    extras.extend(archive_candidates(
+                        prov[i][1], i, prov[i][2], snap,
+                        normalizers=norm))
+        fronts.append(compute_front(cfg, entries, ref_point=ref_point,
+                                    extra_candidates=extras))
     sweep.fronts = fronts
     return sweep
 

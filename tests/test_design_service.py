@@ -1,0 +1,396 @@
+"""Design service (serve.design) + sharding + caches + archives.
+
+Acceptance pins (ISSUE 6):
+
+* the engine batches >= 2 concurrent compatible requests into one
+  stacked scorer group — strictly fewer scorer dispatches than the same
+  requests run sequentially — and streams >= 2 incremental updates per
+  request before the terminal one;
+* records/fronts are **bit-for-bit** what ``run_sweep``/``run_pareto``
+  produce for the same configs, independent of arrival order;
+* ``run_sweep(shard=True)`` (population-axis ``shard_map``) is
+  bit-for-bit identical to the unsharded path on one device;
+* request lifecycle: cancel (queued + active), timeout, error isolation;
+* the scorer/evaluator LRUs bound compiled artifacts and count
+  evictions; the device population archive thickens Pareto fronts.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.api import (Budget, DesignRequest, DesignResponse,
+                            DesignUpdate, ExperimentConfig, SweepConfig,
+                            clear_scorer_cache, run_sweep,
+                            scorer_cache_stats, set_scorer_cache_capacity,
+                            stackable_steps)
+from repro.core.cache import LRUCache
+from repro.core.pareto import (FrontCandidate, IncrementalFront,
+                               ParetoGridSpec, compute_front, run_pareto)
+from repro.serve.design import DesignEngine
+
+
+def tiny_cfg(arch="homog32", **kw):
+    base = dict(arch=arch, algorithms=("br", "ga"), budget=Budget(evals=12),
+                norm_samples=3, chunk=4, params={"br": {"batch": 4}})
+    base.update(kw)
+    return ExperimentConfig(**base)
+
+
+GRID = ParetoGridSpec(term_weights={"area": (0.5, 2.0)})
+
+
+# ---------------------------------------------------------------------------
+# LRUCache unit behavior.
+# ---------------------------------------------------------------------------
+
+def test_lru_eviction_order_and_counter():
+    evicted = []
+    c = LRUCache(2, on_evict=lambda k, v: evicted.append(k))
+    c["a"], c["b"] = 1, 2
+    _ = c["a"]                    # refresh: b is now LRU
+    c["c"] = 3
+    assert "b" not in c and "a" in c and "c" in c
+    assert c.evictions == 1 and evicted == ["b"]
+
+
+def test_lru_pinning_protects_and_overflows():
+    c = LRUCache(1)
+    c["a"] = 1
+    c.pin("a")
+    c["b"] = 2                    # a pinned, b unpinned -> b evicted
+    assert "a" in c and "b" not in c
+    c.pin("a")                    # refcount 2
+    c.unpin("a")
+    c["b"] = 2                    # still pinned once
+    assert "a" in c
+    c.unpin("a")                  # last unpin shrinks
+    c["d"] = 4
+    assert len(c) == 1
+    with pytest.raises(KeyError):
+        c.pin("nope")
+
+
+def test_lru_set_capacity_shrinks():
+    c = LRUCache(4)
+    for i in range(4):
+        c[i] = i
+    c.set_capacity(2)
+    assert len(c) == 2 and c.evictions == 2
+    with pytest.raises(ValueError):
+        c.set_capacity(0)
+
+
+def test_scorer_cache_bounded_counts_evictions():
+    clear_scorer_cache()
+    set_scorer_cache_capacity(1)
+    try:
+        run_sweep([tiny_cfg(algorithms=("br",))])
+        run_sweep([tiny_cfg("hetero32", algorithms=("br",))])
+        res = run_sweep([tiny_cfg(algorithms=("br",))])  # re-compiles
+        stats = scorer_cache_stats()
+        assert stats["capacity"] == 1 and stats["size"] == 1
+        assert stats["evictions"] >= 2
+        assert res.stats.scorer_evictions >= 1
+    finally:
+        set_scorer_cache_capacity(64)
+        clear_scorer_cache()
+
+
+# ---------------------------------------------------------------------------
+# Sharded population path.
+# ---------------------------------------------------------------------------
+
+def test_shard_bitforbit_vs_run_sweep():
+    cfgs = [tiny_cfg(seed=0), tiny_cfg(seed=1)]
+    plain = run_sweep(cfgs)
+    sharded = run_sweep(cfgs, shard=True)
+    assert sharded.stats.shard_devices >= 1
+    for a, b in zip(plain.records, sharded.records):
+        assert a.result.best_cost == b.result.best_cost
+        assert np.array_equal(a.result.best_sol[0], b.result.best_sol[0])
+        assert np.array_equal(a.result.best_sol[1], b.result.best_sol[1])
+
+
+def test_shard_scorer_pads_any_batch():
+    from repro.sharding.population import population_mesh, shard_scorer
+    from repro.core.api import make_evaluator, make_rep
+    from repro.core.chiplets import paper_arch
+    from repro.core.topology import stack_graphs
+    arch = paper_arch("homog32", "baseline")
+    rep = make_rep(arch, "homog32")
+    rng = np.random.default_rng(0)
+    ev = make_evaluator(rep, arch, rng=rng, norm_samples=3, chunk=4)
+    sols = [rep.random(rng) for _ in range(3)]         # odd batch size
+    batch = stack_graphs([rep.score_graph(s) for s in sols])
+    wrapped = shard_scorer(ev.scorer, population_mesh())
+    out = wrapped(batch, ev.norm_vec, ev.weights_vec)
+    ref = ev.score_batch(batch)
+    for k in ref:
+        assert np.array_equal(np.asarray(out[k]), np.asarray(ref[k])), k
+
+
+def test_sweepconfig_shard_serde_roundtrip():
+    sc = SweepConfig(configs=(tiny_cfg(),), shard=True)
+    rt = SweepConfig.from_json(sc.to_json())
+    assert rt.shard is True
+    assert rt.configs[0] == sc.configs[0]
+
+
+# ---------------------------------------------------------------------------
+# Request schema serde.
+# ---------------------------------------------------------------------------
+
+def test_design_request_serde_roundtrip():
+    req = DesignRequest(config=tiny_cfg(archive_k=8), request_id="t1",
+                        pareto_grid=GRID, timeout_s=5.0)
+    rt = DesignRequest.from_dict(req.to_dict())
+    assert rt.config == req.config and rt.config.archive_k == 8
+    assert rt.pareto_grid.n_points == GRID.n_points
+    assert rt.timeout_s == 5.0
+    with pytest.raises(ValueError, match="unknown DesignRequest"):
+        DesignRequest.from_dict({"config": tiny_cfg().to_dict(),
+                                 "nope": 1})
+
+
+def test_experiment_config_archive_k_serde():
+    cfg = tiny_cfg(archive_k=5)
+    assert ExperimentConfig.from_dict(cfg.to_dict()) == cfg
+    assert ExperimentConfig.from_dict(cfg.to_dict()).archive_k == 5
+
+
+# ---------------------------------------------------------------------------
+# Engine: batching + streaming + parity.
+# ---------------------------------------------------------------------------
+
+def test_engine_batches_and_streams():
+    eng = DesignEngine()
+    r1 = eng.submit(DesignRequest(config=tiny_cfg(seed=0)))
+    r2 = eng.submit(DesignRequest(config=tiny_cfg(seed=1)))
+    eng.run()
+    # >= 2 compatible tenants stacked into shared dispatches...
+    assert eng.stats.stacked_rounds >= 1
+    seq = sum(run_sweep([c], fold_repetitions=False).stats.score_calls
+              for c in (tiny_cfg(seed=0), tiny_cfg(seed=1)))
+    assert eng.stats.score_calls < seq
+    # ...and each request streamed >= 2 incremental updates pre-terminal.
+    for rid in (r1, r2):
+        resp = eng.result(rid)
+        assert resp.status == "done"
+        kinds = [u.kind for u in resp.updates]
+        assert kinds[-1] == "done"
+        assert sum(k == "progress" for k in kinds[:-1]) >= 2
+
+
+def test_engine_bitforbit_vs_run_sweep():
+    cfgs = [tiny_cfg(seed=0), tiny_cfg(seed=1)]
+    eng = DesignEngine()
+    rids = [eng.submit(DesignRequest(config=c)) for c in cfgs]
+    eng.run()
+    sw = run_sweep(cfgs, fold_repetitions=False)
+    eng_records = [r for rid in rids for r in eng.result(rid).records]
+    assert len(eng_records) == len(sw.records)
+    for a, b in zip(eng_records, sw.records):
+        assert (a.algorithm, a.repetition) == (b.algorithm, b.repetition)
+        assert a.result.best_cost == b.result.best_cost
+        assert np.array_equal(a.result.best_sol[0], b.result.best_sol[0])
+        assert np.array_equal(a.result.best_sol[1], b.result.best_sol[1])
+
+
+def test_engine_arrival_order_determinism():
+    def run_order(cfg_seeds):
+        eng = DesignEngine()
+        rids = {s: eng.submit(DesignRequest(config=tiny_cfg(seed=s)))
+                for s in cfg_seeds}
+        eng.run()
+        return {s: [(r.algorithm, r.result.best_cost,
+                     np.asarray(r.result.best_sol[0]).tobytes())
+                    for r in eng.result(rid).records]
+                for s, rid in rids.items()}
+
+    a = run_order([0, 1, 2])
+    b = run_order([2, 0, 1])
+    assert a == b
+
+
+def test_engine_sharded_bitforbit():
+    eng_s = DesignEngine(shard=True)
+    eng_p = DesignEngine()
+    for eng in (eng_s, eng_p):
+        eng.submit(DesignRequest(config=tiny_cfg(seed=3),
+                                 request_id="t"))
+        eng.run()
+    a, b = eng_s.result("t"), eng_p.result("t")
+    for x, y in zip(a.records, b.records):
+        assert x.result.best_cost == y.result.best_cost
+        assert np.array_equal(x.result.best_sol[0], y.result.best_sol[0])
+
+
+def test_engine_mixed_homog_hetero():
+    eng = DesignEngine()
+    rh = eng.submit(DesignRequest(config=tiny_cfg(seed=0)))
+    rx = eng.submit(DesignRequest(config=tiny_cfg(
+        "hetero32", algorithms=("br",), seed=0)))
+    eng.run()
+    assert eng.result(rh).status == "done"
+    assert eng.result(rx).status == "done"
+    # different layouts never share a scorer group, but both drain
+    assert eng.stats.completed == 2
+
+
+# ---------------------------------------------------------------------------
+# Engine: lifecycle (cancel / timeout / error / capacity).
+# ---------------------------------------------------------------------------
+
+def test_engine_cancel_queued_and_active():
+    eng = DesignEngine()
+    rq = eng.submit(DesignRequest(config=tiny_cfg(seed=0)))
+    assert eng.cancel(rq) is True
+    assert eng.result(rq).status == "cancelled"
+    assert eng.cancel(rq) is False          # already terminal
+
+    ra = eng.submit(DesignRequest(config=tiny_cfg(seed=1)))
+    eng.step()                              # admitted + first round
+    assert eng.status(ra) == "active"
+    assert eng.cancel(ra) is True
+    eng.run()
+    resp = eng.result(ra)
+    assert resp.status == "cancelled"
+    assert resp.updates[-1].kind == "cancelled"
+    assert eng.stats.cancelled == 2
+
+
+def test_engine_timeout_zero_never_runs():
+    eng = DesignEngine()
+    rid = eng.submit(DesignRequest(config=tiny_cfg(), timeout_s=0.0))
+    eng.run()
+    resp = eng.result(rid)
+    assert resp.status == "timeout" and resp.records == []
+    assert eng.stats.timeouts == 1
+
+
+def test_engine_bad_config_is_isolated():
+    eng = DesignEngine()
+    bad = DesignRequest(config=tiny_cfg(), pareto_grid=ParetoGridSpec(
+        term_weights={"no-such-term": (1.0,)}))
+    rb = eng.submit(bad)
+    rg = eng.submit(DesignRequest(config=tiny_cfg(seed=1)))
+    eng.run()
+    assert eng.result(rb).status == "error"
+    assert "no-such-term" in eng.result(rb).error
+    assert eng.result(rg).status == "done"  # healthy tenant unaffected
+    assert eng.stats.errors == 1
+
+
+def test_engine_max_active_queues_fifo():
+    eng = DesignEngine(max_active=1)
+    r1 = eng.submit(DesignRequest(config=tiny_cfg(seed=0)))
+    r2 = eng.submit(DesignRequest(config=tiny_cfg(seed=1)))
+    eng.step()
+    assert eng.status(r1) == "active" and eng.status(r2) == "queued"
+    eng.run()
+    assert eng.result(r1).status == "done"
+    assert eng.result(r2).status == "done"
+
+
+def test_engine_result_none_while_running():
+    eng = DesignEngine()
+    rid = eng.submit(DesignRequest(config=tiny_cfg()))
+    assert eng.result(rid) is None
+    eng.step()
+    assert eng.result(rid) is None          # still active
+    eng.run()
+    assert isinstance(eng.result(rid), DesignResponse)
+
+
+def test_engine_evaluator_lru_eviction_counter():
+    eng = DesignEngine(evaluator_cache=1)
+    for seed in range(3):
+        eng.submit(DesignRequest(config=tiny_cfg(
+            seed=seed, algorithms=("br",))))
+        eng.run()
+    assert eng.stats.evaluators_built == 3
+    assert eng.stats.evaluator_evictions >= 2
+
+
+# ---------------------------------------------------------------------------
+# Incremental fronts + population archive.
+# ---------------------------------------------------------------------------
+
+def test_incremental_front_matches_compute_front():
+    cfg = tiny_cfg(algorithms=("br",))
+    sw = run_pareto_sweep_entries(cfg)
+    one_shot = compute_front(cfg, sw)
+    inc = IncrementalFront(cfg)
+    from repro.core.pareto import candidates_from_records
+    cands = candidates_from_records(sw)
+    inc.add(cands[:1])
+    streamed = inc.add(cands[1:])
+    assert streamed.hypervolume == one_shot.hypervolume
+    assert len(streamed.points) == len(one_shot.points)
+    for p, q in zip(streamed.points, one_shot.points):
+        assert p.terms == q.terms and p.label == q.label
+
+
+def run_pareto_sweep_entries(cfg):
+    """Grid-expanded (label, cfg_i, objective, record) entries for cfg."""
+    import dataclasses as dc
+    expanded = [(label, obj, dc.replace(cfg, objective=obj))
+                for label, obj in GRID.points(cfg.objective)]
+    sweep = run_sweep([c for _, _, c in expanded],
+                      fold_repetitions=False)
+    entries = []
+    for i, (label, obj, _) in enumerate(expanded):
+        for rec in sweep.runs[i].records:
+            entries.append((label, i, obj, rec))
+    return entries
+
+
+def test_archive_thickens_front_deterministically():
+    cfg = tiny_cfg(algorithms=("br",), budget=Budget(evals=8))
+    f0 = run_pareto(cfg, GRID)
+    f1 = run_pareto(dataclasses.replace(cfg, archive_k=6), GRID)
+    assert f1.n_candidates > f0.n_candidates
+    assert {p.algorithm for p in f1.points} >= {"archive"} or \
+        len(f1.points) >= len(f0.points)
+    f2 = run_pareto(dataclasses.replace(cfg, archive_k=6), GRID)
+    assert f1.to_dict() == f2.to_dict()     # archive runs reproduce
+
+
+def test_archive_on_optresult_shape_and_order():
+    cfg = tiny_cfg(algorithms=("br",), archive_k=5)
+    res = run_sweep([cfg]).records[0].result
+    assert res.archive is not None
+    costs = np.asarray(res.archive["costs"])
+    assert costs.shape[0] <= 5
+    assert np.all(np.diff(costs) >= 0)      # sorted best-first
+    assert np.all(np.isfinite(costs))
+    assert np.asarray(res.archive["a"]).shape[0] == costs.shape[0]
+    # the run's own best is the archive head
+    assert costs[0] == pytest.approx(res.best_cost)
+
+
+def test_engine_front_matches_run_pareto():
+    cfg = tiny_cfg(algorithms=("br",), budget=Budget(evals=8),
+                   archive_k=6)
+    eng = DesignEngine()
+    rid = eng.submit(DesignRequest(config=cfg, pareto_grid=GRID))
+    eng.run()
+    resp = eng.result(rid)
+    assert resp.status == "done" and resp.front is not None
+    assert any(u.kind == "front" for u in resp.updates)
+    ref = run_pareto(cfg, GRID, fold_repetitions=False)
+    assert resp.front.hypervolume == ref.hypervolume
+    assert len(resp.front.points) == len(ref.points)
+
+
+def test_stackable_steps_accessor():
+    assert stackable_steps("ga") is not None
+    assert stackable_steps("not-an-algo") is None
+
+
+def test_design_update_serde():
+    u = DesignUpdate("r1", "progress", tick=3, generation=2, best_cost=1.5)
+    d = u.to_dict()
+    assert d["request_id"] == "r1" and d["kind"] == "progress"
+    assert d["front_size"] is None
