@@ -32,6 +32,14 @@ stage (host metric conversion + ``total_cost`` + argsort vs the jitted
 cost+top-k over device-resident metrics) and also reports the fused
 end-to-end ranking call.
 
+PR 7 adds the **large_v** section: per-generation seconds and FW-kernel
+comparison (pure-XLA reference vs VMEM-resident Pallas vs blocked-tile
+Pallas) on 100+-chiplet archs (homog100 / hex127 / homog256), where the
+VMEM-resident kernel's ~3*V^2*4B working set stops fitting and
+``ops.fw_impl_tiled`` auto-dispatches to the blocked-tile kernel.  It
+also fills the e2e gap: every grid (8x8 and 12x12 included) now emits
+``e2e_per_s`` numbers with per-grid batch budgets.
+
 Results go to stdout as BENCH lines and to
 ``artifacts/bench/pipeline_throughput.json``; ``benchmarks.run`` copies
 that to ``BENCH_pipeline_throughput.json`` at the repo root so the perf
@@ -70,6 +78,20 @@ GRIDS = {
     "12x12": (12, 12, (128, 8, 8)),
 }
 
+# Per-grid e2e budgets (quick, full): e2e includes the FW scorer, whose
+# cost grows O(V^3) — larger grids need smaller batches to keep the bench
+# bounded.  Every grid gets an e2e number in both modes (PR 7: 8x8/12x12
+# previously emitted prep-only artifacts).
+E2E_N = {"6x6": (16, 64), "8x8": (8, 32), "12x12": (4, 8)}
+
+# 100+-chiplet archs for the large-V section (quick mode runs the first
+# only; full mode all).  V here is the scorer's working matrix side
+# (Vp + 2*n virtual rows): homog100 -> 552, hex127 -> 702, homog256 ->
+# 1440 — the last pads past ops.FW_TILED_AUTO_V, so auto-dispatch takes
+# the blocked-tile kernel and the VMEM-resident kernel could not run
+# compiled on a 16 MB-VMEM TPU at all.
+LARGE_ARCHS = ("homog100", "hex127", "homog256")
+
 
 def _host_prep_rate(rep, parents, n: int) -> float:
     """Host-loop GA-generation prep: merge + mutate + score_graph each."""
@@ -107,11 +129,12 @@ def _device_prep_rate(rep, parents, n: int) -> float:
     return n / best
 
 
-def _e2e_rates(rep, arch, n: int, chunk: int) -> tuple[float, float]:
+def _e2e_rates(rep, arch, n: int, chunk: int, norm_samples: int = 8
+               ) -> tuple[float, float]:
     """Full GA generation incl. scoring + validity: host retry loop vs
     device mask-and-resample.  Returns (host_per_s, device_per_s)."""
-    ev = Evaluator(rep, arch, rng=np.random.default_rng(0), norm_samples=8,
-                   chunk=chunk)
+    ev = Evaluator(rep, arch, rng=np.random.default_rng(0),
+                   norm_samples=norm_samples, chunk=chunk)
     rng = np.random.default_rng(2)
     parents, _ = ev.generate_valid(rep.random, rng, max(4, n // 4))
 
@@ -254,11 +277,80 @@ def _ranking_rates(arch_name: str, n: int, k: int = 4
     return total / host_best, total / dev_best, n / fused_best
 
 
+def _large_v_section(arch_name: str, gen_n: int, norm_samples: int,
+                     time_vmem: bool) -> dict:
+    """Per-generation throughput + FW-kernel comparison at 100+-chiplet V.
+
+    * **generation**: one device GA generation (fused sample_children +
+      scoring via ``costs_from``) with the "fw-ref" production backend —
+      the per-generation seconds the tiled kernel exists to bound.
+    * **kernels**: steady-state FW timings on a real placement's W — the
+      pure-XLA reference, the VMEM-resident Pallas kernel (skipped when
+      its working set cannot fit VMEM, or when ``time_vmem`` is False),
+      and the blocked-tile kernel — plus the static VMEM-feasibility
+      numbers driving ``ops.fw_impl_tiled``'s auto-dispatch.
+    """
+    from repro.core.api import make_evaluator, make_rep
+    from repro.core.chiplets import resolve_arch
+    from repro.kernels.minplus import fw_counts_pallas, fw_counts_tiled_pallas
+    from repro.kernels.ops import FW_TILED_AUTO_V
+    from repro.kernels import ref
+
+    arch = resolve_arch(arch_name, "baseline")
+    rep = make_rep(arch, arch_name)
+    ev = make_evaluator(rep, arch, rng=np.random.default_rng(0),
+                        norm_samples=norm_samples, chunk=4, backend="fw-ref")
+    pipe = ev.pipeline()
+    rng = np.random.default_rng(1)
+    parents, _ = ev.generate_valid(rep.random, rng, 4)
+    idx = rng.integers(len(parents), size=(gen_n, 2))
+    pa_t = np.stack([parents[a][0] for a, _ in idx])
+    pa_r = np.stack([parents[a][1] for a, _ in idx])
+    pb_t = np.stack([parents[b][0] for _, b in idx])
+    pb_r = np.stack([parents[b][1] for _, b in idx])
+
+    def generation():
+        _, _, m = pipe.sample_children(rng, pa_t, pa_r, pb_t, pb_r, 0.5)
+        return ev.costs_from(m)
+
+    generation()                                  # warm the jits
+    t0 = time.perf_counter()
+    generation()
+    gen_s = time.perf_counter() - t0
+
+    W = jnp.asarray(rep.score_graph(parents[0]).W)
+    V = int(W.shape[-1])
+    Vp128 = max(128, -(-V // 128) * 128)
+    vmem_mb = 3 * Vp128 * Vp128 * 4 / 2**20       # W, D, N resident
+    fits_vmem = vmem_mb <= 16.0
+    out = dict(V=V, padded_V=Vp128, n_chiplets=len(arch.chiplets),
+               gen_n=gen_n, seconds_per_generation=gen_s,
+               gen_placements_per_s=gen_n / gen_s,
+               vmem_required_mb=round(vmem_mb, 1), fits_vmem=fits_vmem,
+               auto_dispatch=("vmem" if Vp128 <= FW_TILED_AUTO_V
+                              else "tiled"))
+
+    def _time(fn):
+        f = jax.jit(fn)
+        jax.block_until_ready(f(W)[0])            # compile + warm
+        best = np.inf
+        for _ in range(2):
+            t0 = time.perf_counter()
+            jax.block_until_ready(f(W)[0])
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    out["fw_ref_s"] = _time(ref.fw_counts_ref)
+    out["fw_tiled_s"] = _time(fw_counts_tiled_pallas)
+    if fits_vmem and time_vmem:
+        out["fw_vmem_s"] = _time(fw_counts_pallas)
+    return out
+
+
 def run(quick: bool = True) -> dict:
     n = budget(quick, 48, 256)
-    e2e_n = budget(quick, 16, 64)
-    e2e_grids = budget(quick, ("6x6",), ("6x6", "8x8"))
-    results: dict = {"n_prep": n, "n_e2e": e2e_n}
+    e2e_norm = budget(quick, 2, 8)
+    results: dict = {"n_prep": n}
     for name, (R, C, (nc, nm, ni)) in GRIDS.items():
         arch = homogeneous_arch(nc, nm, ni, "baseline")
         rep = HomogRep(arch, R=R, C=C)
@@ -274,13 +366,14 @@ def run(quick: bool = True) -> dict:
              "one fused device call; connectivity rides the scorer FW")
         emit(f"pipeline_{name}_prep_speedup", round(dev / host, 1),
              f"{dev / host:.1f}x device over host loop")
-        if name in e2e_grids:
-            h2, d2 = _e2e_rates(rep, arch, e2e_n, budget(quick, 8, 16))
-            results[name].update(host_e2e_per_s=h2, device_e2e_per_s=d2,
-                                 e2e_speedup=d2 / h2)
-            emit(f"pipeline_{name}_e2e_speedup", round(d2 / h2, 2),
-                 "incl. shared FW scorer (FW-bound on CPU; prep ratio is "
-                 "the refactor's target)")
+        e2e_n = budget(quick, *E2E_N[name])
+        h2, d2 = _e2e_rates(rep, arch, e2e_n, budget(quick, 8, 16),
+                            norm_samples=e2e_norm)
+        results[name].update(host_e2e_per_s=h2, device_e2e_per_s=d2,
+                             e2e_speedup=d2 / h2, n_e2e=e2e_n)
+        emit(f"pipeline_{name}_e2e_speedup", round(d2 / h2, 2),
+             "incl. shared FW scorer (FW-bound on CPU; prep ratio is "
+             "the refactor's target)")
     # heterogeneous path (PR 3): batched Borůvka link inference vs the
     # per-child host Kruskal+union-find loop
     hn = budget(quick, 32, 128)
@@ -310,6 +403,33 @@ def run(quick: bool = True) -> dict:
     emit("objective_ranking_stage_speedup", round(rd / rh, 1),
          f"{rd / rh:.1f}x device cost+top-k over host formula+argsort "
          "(target >= 2x)")
+    # large-V section (PR 7): per-generation throughput + FW-kernel
+    # comparison in the 100+-chiplet (HexaMesh) regime, where the
+    # blocked-tile FW replaces the VMEM-resident kernel
+    large_gen_n = {"homog100": (8, 32), "hex127": (8, 16),
+                   "homog256": (4, 8)}
+    large = {}
+    for arch_name in LARGE_ARCHS[:1] if quick else LARGE_ARCHS:
+        # per-arch budgets: homog256's V=1440 FW dominates; small n still
+        # yields stable per-generation seconds (one fused call either way)
+        gen_n = budget(quick, *large_gen_n[arch_name])
+        norm = min(e2e_norm, 2) if arch_name == "homog256" else e2e_norm
+        sec = _large_v_section(arch_name, gen_n, norm,
+                               time_vmem=not quick or arch_name == "homog100")
+        large[arch_name] = sec
+        emit(f"large_v_{arch_name}_s_per_generation",
+             round(sec["seconds_per_generation"], 2),
+             f"device generation of {sec['gen_n']} at V={sec['V']} "
+             "(fw-ref backend)")
+        emit(f"large_v_{arch_name}_fw_tiled_s",
+             round(sec["fw_tiled_s"], 3),
+             f"blocked-tile FW+counts, one [V,V] at padded V="
+             f"{sec['padded_V']}")
+        emit(f"large_v_{arch_name}_vmem_required_mb",
+             sec["vmem_required_mb"],
+             f"VMEM-resident kernel needs this; fits_vmem="
+             f"{sec['fits_vmem']}, auto-dispatch={sec['auto_dispatch']}")
+    results["large_v"] = large
     # headline: the acceptance metric — GA-generation production on 8x8
     emit("pipeline_8x8_ga_generation_speedup",
          round(results["8x8"]["prep_speedup"], 1),

@@ -47,7 +47,7 @@ import numpy as np
 
 from .baseline import MeshBaseline
 from .cache import LRUCache
-from .chiplets import ArchSpec, paper_arch
+from .chiplets import LARGE_HOMOG, ArchSpec, paper_arch, resolve_arch
 from .objective import Objective, Schedule, TrafficMix
 from .optimize import (Evaluator, OptResult, best_random,
                        best_random_batched, best_random_batched_steps,
@@ -59,7 +59,7 @@ from .optimize import (Evaluator, OptResult, best_random,
                        simulated_annealing_batched_steps,
                        simulated_annealing_steps)
 from .placement_hetero import HeteroRep
-from .placement_homog import HomogRep
+from .placement_homog import HomogRep, hex_mask
 from .proxies import fw_counts_ref, make_scorer
 from .registries import (OPTIMIZERS, SCORER_BACKENDS, OptimizerEntry,
                          register_optimizer, register_scorer_backend,
@@ -67,6 +67,16 @@ from .registries import (OPTIMIZERS, SCORER_BACKENDS, OptimizerEntry,
 
 # Paper §V-B grid sizes: R*C >= N with one spare row of slack.
 GRID_DIMS = {32 + 4 + 4: (8, 5), 64 + 8 + 8: (10, 8)}
+
+# 100+-chiplet (HexaMesh-regime) grids: (R, C, hex side or None).  hex127
+# places 127 chiplets on the centered-hexagonal mask of side 7 (13x13
+# grid, 127 allowed cells).
+LARGE_GRIDS = {
+    "homog100": (10, 10, None),
+    "homog144": (12, 12, None),
+    "homog256": (16, 16, None),
+    "hex127": (13, 13, 7),
+}
 
 
 # ---------------------------------------------------------------------------
@@ -250,6 +260,16 @@ def _backend_fw_pallas() -> Callable:
     return fw_impl_pallas
 
 
+@register_scorer_backend("fw-tiled")
+def _backend_fw_tiled() -> Callable:
+    """Size-dispatched Pallas FW: the VMEM-resident kernel while the
+    padded V fits ``ops.FW_TILED_AUTO_V``, the blocked-tile three-phase
+    kernel beyond (O(bt^2) per grid program — the 100+-chiplet regime).
+    Both paths are bit-for-bit equal to "fw-ref"."""
+    from repro.kernels.ops import fw_impl_tiled
+    return fw_impl_tiled
+
+
 # ---------------------------------------------------------------------------
 # Paper Table III/IV defaults, typed.
 # ---------------------------------------------------------------------------
@@ -281,13 +301,29 @@ PAPER_DEFAULTS: dict[tuple[str, int], ArchDefaults] = {
 }
 
 
+# Defaults for the 100+-chiplet families: GA/SA shapes from the paper's
+# homog64 row (the closest calibrated point); population kept modest so a
+# generation's scoring batch stays device-friendly at V in the hundreds.
+LARGE_DEFAULTS = ArchDefaults(
+    ga=GAParams(population=50, elitism=8, tournament=8),
+    sa=SAParams(t0_temp=35.0, block_len=50),
+    mutation_mode="neighbor-one")
+
+
 def arch_family(arch_name: str) -> tuple[str, int]:
+    if arch_name in LARGE_GRIDS:
+        # Large homog families ("hex127" has no "homog" prefix and no
+        # 32/64 substring — the paper heuristics below would misfile it).
+        n = sum(LARGE_HOMOG[arch_name])
+        return "homog", n
     fam = "homog" if arch_name.startswith("homog") else "hetero"
     size = 32 if "32" in arch_name else 64
     return fam, size
 
 
 def paper_defaults(arch_name: str) -> ArchDefaults:
+    if arch_name in LARGE_GRIDS:
+        return LARGE_DEFAULTS
     return PAPER_DEFAULTS[arch_family(arch_name)]
 
 
@@ -299,10 +335,16 @@ def algo_seed(seed: int, repetition: int, algo: str) -> int:
 
 def make_rep(arch: ArchSpec, arch_name: str,
              mutation_mode: str | None = None):
-    """Placement representation for a paper architecture (§V-A / §VI-A)."""
+    """Placement representation for a named architecture (§V-A / §VI-A,
+    plus the LARGE_GRIDS 100+-chiplet families)."""
     fam, _ = arch_family(arch_name)
     mode = mutation_mode or paper_defaults(arch_name).mutation_mode
     if fam == "homog":
+        if arch_name in LARGE_GRIDS:
+            R, C, hex_side = LARGE_GRIDS[arch_name]
+            allowed = None if hex_side is None else hex_mask(hex_side)
+            return HomogRep(arch, R=R, C=C, mutation_mode=mode,
+                            allowed=allowed)
         n = len(arch.chiplets)
         R, C = GRID_DIMS.get(n, (int(np.ceil(np.sqrt(n))),) * 2)
         return HomogRep(arch, R=R, C=C, mutation_mode=mode)
@@ -552,7 +594,7 @@ def run_experiment(config: ExperimentConfig, *, fw_impl=None
     across processes but differ from pre-API saved runs.  ``fw_impl`` is
     the legacy raw-callable hook; prefer ``config.backend``.
     """
-    arch = paper_arch(config.arch, config.config)
+    arch = resolve_arch(config.arch, config.config)
     entries = [OPTIMIZERS.get(a) for a in config.algorithms]   # fail fast
     records: list[RunRecord] = []
     for rep_i in range(config.repetitions):
@@ -579,7 +621,7 @@ def run_experiment(config: ExperimentConfig, *, fw_impl=None
 def baseline_cost(config: ExperimentConfig, *, fw_impl=None
                   ) -> tuple[float, dict]:
     """2D-mesh baseline scored with the same normalizers (§VII)."""
-    arch = paper_arch(config.arch, config.config)
+    arch = resolve_arch(config.arch, config.config)
     rng = np.random.default_rng(config.seed)
     rep = make_rep(arch, config.arch, config.mutation_mode)
     ev = make_evaluator(rep, arch, rng=rng,
@@ -919,7 +961,7 @@ def run_sweep(configs, *, fold_repetitions: bool = True,
     ev_cache: dict[tuple, Evaluator] = {}
     units: list[_SweepUnit] = []
     for cfg_i, cfg in enumerate(configs):
-        arch = paper_arch(cfg.arch, cfg.config)
+        arch = resolve_arch(cfg.arch, cfg.config)
         nkey = (cfg.arch, cfg.config, cfg.seed, cfg.norm_samples, cfg.chunk,
                 cfg.backend, cfg.mutation_mode, cfg.objective.normalizer)
         key = nkey + (cfg.objective, cfg.schedule, cfg.archive_k)

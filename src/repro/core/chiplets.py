@@ -236,3 +236,31 @@ def paper_arch(which: str, config: str = "baseline") -> ArchSpec:
     if which == "hetero64":
         return heterogeneous_arch(64, 8, 8, config)
     raise ValueError(which)
+
+
+# 100+-chiplet homogeneous families (the HexaMesh regime, PAPERS.md):
+# (n_compute, n_memory, n_io).  Compute:memory:io stays ~10.5:1:1 like the
+# paper's homog arches; hex127 is a centered-hexagonal arrangement (side 7
+# -> 127 cells) placed on a masked square grid.
+LARGE_HOMOG = {
+    "homog100": (84, 8, 8),
+    "homog144": (120, 12, 12),
+    "homog256": (224, 16, 16),
+    "hex127": (107, 10, 10),
+}
+
+
+def large_arch(which: str, config: str = "baseline") -> ArchSpec:
+    """100+-chiplet homogeneous architectures beyond the paper's four."""
+    try:
+        nc, nm, ni = LARGE_HOMOG[which]
+    except KeyError:
+        raise ValueError(which) from None
+    return homogeneous_arch(nc, nm, ni, config)
+
+
+def resolve_arch(which: str, config: str = "baseline") -> ArchSpec:
+    """Any named architecture: the paper's four or a LARGE_HOMOG family."""
+    if which in LARGE_HOMOG:
+        return large_arch(which, config)
+    return paper_arch(which, config)

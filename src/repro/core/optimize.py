@@ -720,7 +720,13 @@ class DevicePipeline:
     @classmethod
     def _stages(cls, rep):
         if isinstance(rep, HomogRep):
-            key = ("homog", rep.arch, rep.R, rep.C, rep.mutation_mode)
+            # The allowed-cell mask shapes every stage (generation,
+            # mutation, area); two reps differing only in mask must not
+            # share compiled stages.
+            mask_key = (None if rep.allowed is None
+                        else rep.allowed.tobytes())
+            key = ("homog", rep.arch, rep.R, rep.C, rep.mutation_mode,
+                   mask_key)
         elif isinstance(rep, HeteroRep):
             key = ("hetero", rep.arch, rep.mutation_mode)
         else:
@@ -731,7 +737,7 @@ class DevicePipeline:
             return cls._STAGE_CACHE[key]
         ops = rep.batch_ops()
         if isinstance(rep, HomogRep):
-            gb = HomogGraphBatch(rep.arch, rep.R, rep.C)
+            gb = HomogGraphBatch(rep.arch, rep.R, rep.C, area=rep.area)
 
             @functools.partial(jax.jit, static_argnames=("n",))
             def _gen(key, n):

@@ -48,7 +48,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .api import make_evaluator, make_rep, run_sweep
-from .chiplets import paper_arch
+from .chiplets import resolve_arch
 from .objective import (Objective, TrafficMix, compile_objective, norms_vec,
                         weights_vec)
 from .topology import stack_graphs
@@ -404,7 +404,7 @@ class IncrementalFront:
     def __init__(self, base_cfg, *, ref_point=None):
         self.base_cfg = base_cfg
         self.ref_point = ref_point
-        self._arch = paper_arch(base_cfg.arch, base_cfg.config)
+        self._arch = resolve_arch(base_cfg.arch, base_cfg.config)
         self._rep = make_rep(self._arch, base_cfg.arch,
                              base_cfg.mutation_mode)
         self._ev = None                       # built on first add

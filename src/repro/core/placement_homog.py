@@ -32,6 +32,20 @@ def sol_key(sol: Sol) -> bytes:
     return sol[0].tobytes() + sol[1].tobytes()
 
 
+def hex_mask(side: int) -> np.ndarray:
+    """Allowed-cell mask for a centered-hexagonal arrangement of ``side`` s:
+    2s-1 rows of widths s, s+1, ..., 2s-1, ..., s+1, s (3s^2 - 3s + 1 cells,
+    s=7 -> 127) centered on a (2s-1) x (2s-1) grid — the HexaMesh layout
+    expressed on the square-grid representation."""
+    n = 2 * side - 1
+    mask = np.zeros((n, n), dtype=bool)
+    for r in range(n):
+        width = n - abs(r - (side - 1))
+        lo = (n - width) // 2
+        mask[r, lo:lo + width] = True
+    return mask
+
+
 @dataclass
 class HomogRep:
     """Placement representation + operators for homogeneous chiplet shapes."""
@@ -40,10 +54,19 @@ class HomogRep:
     R: int
     C: int
     mutation_mode: str = "neighbor-one"   # any-both | any-one | neighbor-both | neighbor-one
+    allowed: np.ndarray | None = None     # [R, C] bool cell mask (None = all)
 
     def __post_init__(self):
         n = len(self.arch.chiplets)
-        if self.R * self.C < n:
+        if self.allowed is not None:
+            self.allowed = np.asarray(self.allowed, dtype=bool)
+            if self.allowed.shape != (self.R, self.C):
+                raise ValueError("allowed mask shape != (R, C)")
+            if self.allowed.all():
+                self.allowed = None       # degenerate mask == no mask
+        n_cells = (self.R * self.C if self.allowed is None
+                   else int(self.allowed.sum()))
+        if n_cells < n:
             raise ValueError("grid too small for chiplet count")
         self._kind_instances = {
             k: [i for i, ch in enumerate(self.arch.chiplets) if ch.kind == k]
@@ -68,11 +91,17 @@ class HomogRep:
 
     @property
     def area(self) -> float:
-        # §V-A get_area: chiplet_size * R * C (identical for all placements).
+        # §V-A get_area: chiplet_size * n_cells (identical for all
+        # placements); masked cells are not part of the package.
         sz = self.arch.chiplets[0].w * self.arch.chiplets[0].h
-        return float(sz * self.R * self.C)
+        n_cells = (self.R * self.C if self.allowed is None
+                   else int(self.allowed.sum()))
+        return float(sz * n_cells)
 
     # -- helpers ---------------------------------------------------------
+    def _cell_allowed(self, r: int, c: int) -> bool:
+        return self.allowed is None or bool(self.allowed[r, c])
+
     def _occupied_dirs(self, types: np.ndarray, r: int, c: int) -> list[int]:
         """Rotations whose PHY faces an occupied neighbor cell."""
         out = []
@@ -88,7 +117,8 @@ class HomogRep:
         for rot, d in enumerate(_ROT_DIR):
             dr, dc = _DIR_DELTA[d]
             rr, cc = r + dr, c + dc
-            if 0 <= rr < self.R and 0 <= cc < self.C:
+            if 0 <= rr < self.R and 0 <= cc < self.C \
+                    and self._cell_allowed(rr, cc):
                 out.append(rot)
         return out
 
@@ -116,7 +146,9 @@ class HomogRep:
         flat = np.full(cells, -1, dtype=np.int8)
         kinds = [k for k, ids in self._kind_instances.items()
                  for _ in ids]
-        pos = rng.choice(cells, size=len(kinds), replace=False)
+        cand = (np.arange(cells) if self.allowed is None
+                else np.flatnonzero(self.allowed.reshape(-1)))
+        pos = rng.choice(cand, size=len(kinds), replace=False)
         flat[pos] = np.array(kinds, dtype=np.int8)
         types = flat.reshape(self.R, self.C)
         rot = np.zeros_like(types)
@@ -153,6 +185,9 @@ class HomogRep:
             else:
                 r2 = int(rng.integers(self.R))
                 c2 = int(rng.integers(self.C))
+            if not (self._cell_allowed(r1, c1)
+                    and self._cell_allowed(r2, c2)):
+                continue
             if types[r1, c1] == types[r2, c2]:
                 continue
             if types[r1, c1] < 0 and types[r2, c2] < 0:
@@ -341,8 +376,14 @@ class HomogBatch:
         self.rep = rep
         self.R, self.C = rep.R, rep.C
         self.cells = rep.R * rep.C
+        allowed = (np.ones((self.R, self.C), bool) if rep.allowed is None
+                   else rep.allowed)
+        self._masked = rep.allowed is not None
+        self._allowed_flat = jnp.asarray(allowed.reshape(-1))
+        self._allowed_idx = jnp.asarray(np.flatnonzero(allowed.reshape(-1)))
+        n_allowed = int(allowed.sum())
         fill = [k for k, ids in rep._kind_instances.items() for _ in ids]
-        fill += [-1] * (self.cells - len(fill))
+        fill += [-1] * (n_allowed - len(fill))
         self._kinds_fill = jnp.asarray(np.array(fill, dtype=np.int8))
         self._counts = np.array(
             [len(rep._kind_instances.get(k, ())) for k in _KINDS], np.int32)
@@ -355,8 +396,10 @@ class HomogBatch:
             dr, dc = _DIR_DELTA[d]
             for r in range(self.R):
                 for c in range(self.C):
-                    inside[r, c, rot_i] = (0 <= r + dr < self.R
-                                           and 0 <= c + dc < self.C)
+                    rr, cc = r + dr, c + dc
+                    inside[r, c, rot_i] = (0 <= rr < self.R
+                                           and 0 <= cc < self.C
+                                           and allowed[rr, cc])
         self._inside = jnp.asarray(inside)
         self._dr = jnp.asarray(
             np.array([_DIR_DELTA[d][0] for d in _ROT_DIR], np.int32))
@@ -398,11 +441,16 @@ class HomogBatch:
     # -- the four representation functions, batched -------------------------
     def random_batch(self, key, n: int) -> tuple[jnp.ndarray, jnp.ndarray]:
         """n independent uniform placements: a random permutation of the
-        chiplet-kind multiset over the grid, rotations re-rolled."""
+        chiplet-kind multiset over the allowed cells, rotations re-rolled."""
         k1, k2 = jax.random.split(key)
         keys = jax.random.split(k1, n)
-        flat = jax.vmap(
+        perm = jax.vmap(
             lambda k: jax.random.permutation(k, self._kinds_fill))(keys)
+        if self._masked:
+            flat = jnp.full((n, self.cells), -1, dtype=perm.dtype)
+            flat = flat.at[:, self._allowed_idx].set(perm)
+        else:
+            flat = perm
         types = flat.reshape(n, self.R, self.C)
         rot = jnp.zeros_like(types)
         rot = self._roll_rot_batch(k2, types, rot,
@@ -454,6 +502,8 @@ class HomogBatch:
         t1 = jnp.take_along_axis(tflat, i1, axis=1)
         t2 = jnp.take_along_axis(tflat, i2, axis=1)
         valid = inb & (t1 != t2) & ~((t1 < 0) & (t2 < 0))
+        if self._masked:
+            valid &= self._allowed_flat[i1] & self._allowed_flat[i2]
         first = jnp.argmax(valid, axis=1)
         sel = lambda a: jnp.take_along_axis(a, first[:, None], axis=1)[:, 0]
         do_it = do_swap & valid.any(axis=1)

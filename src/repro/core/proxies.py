@@ -33,6 +33,13 @@ from .objective import NORM_DIM, compile_objective, weight_dim, weights_vec
 INF_CUT = 1.0e8   # entries >= this are treated as "unreachable"
 _COUNT_CLIP = 1.0e30
 
+# Per-chunk element budget for the scorer's dominant intermediates (~256 MB
+# of float32 at 64M elements, times the chunk's vmap width before the
+# clamp kicks in).  Chosen so every paper arch keeps its full default
+# chunk (V <= ~450 -> clamp inactive) while 100+-chiplet archs
+# (V in the hundreds-to-thousands) shrink gracefully.
+_CHUNK_ELEM_BUDGET = 1 << 26
+
 
 @dataclass(frozen=True)
 class Layout:
@@ -193,6 +200,7 @@ def make_scorer(layout: Layout, *, fw_impl=fw_counts_ref, chunk: int = 16,
             layout.Vp + layout.N + np.arange(layout.N, dtype=np.int32))
     one = functools.partial(_metrics_one, pairs=pairs, conn=conn,
                             fw_impl=fw_impl)
+    pair_elems = max(len(s) * len(d) for s, d, _ in pairs.values())
     cobj = compile_objective(objective, layout) \
         if objective is not None else None
     Vp = layout.Vp
@@ -204,6 +212,17 @@ def make_scorer(layout: Layout, *, fw_impl=fw_counts_ref, chunk: int = 16,
     def score(batch, norms=None, weights=None):
         batch = dict(batch)
         P = batch["W"].shape[0]
+        # Clamp the chunk so one vmapped chunk's dominant intermediates —
+        # the [V, V] FW matrices and the [S, E, T] ECMP on-shortest-path
+        # tensor — stay within a fixed element budget.  Shapes are static
+        # under jit, so this is trace-time host math; results are
+        # chunk-invariant, so the clamp never changes scores.  At paper
+        # sizes (V <= ~450) the clamp is inactive (eff == chunk); in the
+        # 100+-chiplet regime it shrinks the chunk instead of OOMing.
+        V = batch["W"].shape[-1]
+        E = batch["edges"].shape[1]
+        per = max(V * V, pair_elems * E)
+        eff = max(1, min(chunk, _CHUNK_ELEM_BUDGET // per))
         if cobj is not None:
             if norms is None:
                 norms = jnp.ones((NORM_DIM,), jnp.float32)
@@ -213,7 +232,7 @@ def make_scorer(layout: Layout, *, fw_impl=fw_counts_ref, chunk: int = 16,
                 weights = default_w
             batch["_weights"] = jnp.broadcast_to(
                 jnp.asarray(weights, jnp.float32), (P, WDIM))
-        pad = (-P) % chunk
+        pad = (-P) % eff
         padded = {k: jnp.concatenate([v, jnp.repeat(v[:1], pad, axis=0)])
                   if pad else v for k, v in batch.items()}
 
@@ -234,7 +253,7 @@ def make_scorer(layout: Layout, *, fw_impl=fw_counts_ref, chunk: int = 16,
             return jax.vmap(one_full)(c["W"], c["edges"], c["edge_mask"],
                                       c["area"], extras)
 
-        chunked = {k: v.reshape((-1, chunk) + v.shape[1:])
+        chunked = {k: v.reshape((-1, eff) + v.shape[1:])
                    for k, v in padded.items()}
         res = jax.lax.map(score_chunk, chunked)
         return {k: v.reshape(-1)[:P] for k, v in res.items()}

@@ -7,9 +7,10 @@ The PlaceIT pipeline is pluggable at four seams:
   with the uniform signature ``(evaluator, rng, budget, params) -> OptResult``
   plus a typed params dataclass (``api.BRParams`` etc.).
 * **scorer backends** — the Floyd-Warshall ``W -> (D, Ncnt)`` implementation
-  that dominates evaluation time (paper Table V): the pure-XLA reference or
-  the Pallas VMEM-resident kernel, selected by name (``"fw-ref"``,
-  ``"fw-pallas"``).
+  that dominates evaluation time (paper Table V): the pure-XLA reference,
+  the Pallas VMEM-resident kernel, or the size-dispatched blocked-tile
+  kernel for 100+-chiplet archs, selected by name (``"fw-ref"``,
+  ``"fw-pallas"``, ``"fw-tiled"``).
 * **objective terms** — the summands of the placement cost function
   (paper §IV-B): the built-in ``lat`` / ``inv-thr`` / ``area`` terms plus
   penalty terms, composed into an ``objective.Objective`` and lowered into

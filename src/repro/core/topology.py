@@ -237,7 +237,8 @@ def stack_graphs(graphs: list[ScoreGraph]) -> dict:
 class HomogGraphBatch:
     """Batched ``(types, rot) -> stacked ScoreGraph arrays`` for one grid."""
 
-    def __init__(self, arch: ArchSpec, R: int, C: int):
+    def __init__(self, arch: ArchSpec, R: int, C: int,
+                 area: float | None = None):
         self.arch, self.R, self.C = arch, R, C
         n = len(arch.chiplets)
         phy_base = np.zeros(n + 1, dtype=np.int64)
@@ -318,9 +319,11 @@ class HomogGraphBatch:
                                      _side_pos(c2, "nesw"[l2])))
                 for c1, c2, l1, l2 in zip(cell1, cell2, loc1, loc2)]
         self._a_len = jnp.asarray(np.array(alen, np.float32))
-        # §V-A get_area: identical for every placement on the grid.
+        # §V-A get_area: identical for every placement on the grid.  A
+        # masked rep (hex arrangement) passes its own cell count via
+        # ``area`` — masked cells are not part of the package.
         sz = arch.chiplets[0].w * arch.chiplets[0].h
-        self.area = np.float32(sz * R * C)
+        self.area = np.float32(sz * R * C if area is None else area)
 
     def _instances(self, tflat: jnp.ndarray) -> jnp.ndarray:
         """Row-major instance ids per cell ([B, cells], -1 for empty)."""

@@ -18,12 +18,22 @@ below keep the working set VMEM-resident instead:
   with an accumulate-min inner loop.  Used for beyond-paper-scale APSP via
   repeated squaring.
 
+* ``fw_counts_tiled_pallas`` — blocked-tile Floyd-Warshall **with path
+  counts** for the 100+-chiplet regime (HexaMesh scale), where 3 x (V, V)
+  float32 no longer fits VMEM.  The classic three-phase blocked FW
+  (diagonal block -> row/col panels -> outer tiles), batched over
+  placements; each grid program's (D, N) working set is one (bt, bt)
+  tile.  Bit-for-bit equal to ``ref.fw_counts_ref`` — see the per-pivot
+  snapshot scheme below.
+
 Hardware note (DESIGN.md §3): (min, +) has no MXU mapping — these are VPU
-kernels; tiles are (8k, 128)-aligned.  On CPU both run via interpret=True.
+kernels; tiles are (8k, 128)-aligned.  Off-TPU all kernels default to
+interpret mode (``interpret=None`` auto-selects from the JAX backend).
 """
 from __future__ import annotations
 
 import functools
+import math
 
 import jax
 import jax.numpy as jnp
@@ -34,6 +44,16 @@ from . import _compat
 
 INF_CUT = 1.0e8
 _COUNT_CLIP = 1.0e30
+
+
+def _default_interpret() -> bool:
+    """Interpret off-TPU, compile on TPU — callers no longer thread the
+    flag; pass an explicit bool to override."""
+    return jax.default_backend() != "tpu"
+
+
+def _resolve_interpret(interpret) -> bool:
+    return _default_interpret() if interpret is None else bool(interpret)
 
 
 # ---------------------------------------------------------------------------
@@ -68,24 +88,33 @@ def _fw_counts_kernel(w_ref, d_ref, n_ref, *, V: int):
     n_ref[0] = N
 
 
-def fw_counts_pallas(W: jnp.ndarray, *, interpret: bool = True
+def _pad_isolated(W: jnp.ndarray, Vp: int) -> jnp.ndarray:
+    """Pad [B, V, V] up to [B, Vp, Vp] with isolated nodes (diag 0, else
+    INF); padded rows/cols never interact with real nodes, so the result
+    restricted to real indices is bit-for-bit the unpadded computation."""
+    B, V0, _ = W.shape
+    if Vp == V0:
+        return W
+    pad = jnp.full((B, Vp, Vp), 1e9, dtype=W.dtype)
+    pad = pad.at[:, :V0, :V0].set(W)
+    idx = jnp.arange(V0, Vp)
+    return pad.at[:, idx, idx].set(0.0)
+
+
+def fw_counts_pallas(W: jnp.ndarray, *, interpret: bool | None = None
                      ) -> tuple[jnp.ndarray, jnp.ndarray]:
     """Batched FW + counts.  W: [B, V, V] float32, V % 128 == 0 preferred.
 
     Pads V up to a multiple of 128 with isolated nodes (diag 0, else INF);
     padded rows/cols do not interact with real nodes.
     """
+    interpret = _resolve_interpret(interpret)
     squeeze = W.ndim == 2
     if squeeze:
         W = W[None]
     B, V0, _ = W.shape
     Vp = max(128, -(-V0 // 128) * 128)
-    if Vp != V0:
-        pad = jnp.full((B, Vp, Vp), 1e9, dtype=W.dtype)
-        pad = pad.at[:, :V0, :V0].set(W)
-        idx = jnp.arange(V0, Vp)
-        pad = pad.at[:, idx, idx].set(0.0)
-        W = pad
+    W = _pad_isolated(W, Vp)
     kern = functools.partial(_fw_counts_kernel, V=Vp)
     D, N = pl.pallas_call(
         kern,
@@ -99,6 +128,269 @@ def fw_counts_pallas(W: jnp.ndarray, *, interpret: bool = True
             dimension_semantics=("parallel",)),
         interpret=interpret,
     )(W)
+    D, N = D[:, :V0, :V0], N[:, :V0, :V0]
+    if squeeze:
+        D, N = D[0], N[0]
+    return D, N
+
+
+# ---------------------------------------------------------------------------
+# Blocked-tile Floyd-Warshall WITH path counts (the 100+-chiplet regime).
+#
+# Naive blocked FW (fully relax the pivot block and panels, then one
+# min-plus GEMM over the outer tiles) is correct for distances but WRONG
+# for path counts: replaying a whole pivot block against an outer tile
+# with end-of-block panel values double-counts paths that tie through
+# several pivots.  The scheme below is exact — bit-for-bit equal to the
+# sequential ``fw_counts_ref`` — because every tile replays the reference's
+# per-pivot rank-1 updates with the reference's operands:
+#
+# * Pivots k inside a block are processed strictly in order.  At pivot k,
+#   row k and column k are themselves masked from the update (the ``notk``
+#   mask), so their time-k values equal their state after pivots < k.
+# * Phase 1 (diagonal block) records, for each local pivot k, *snapshots*
+#   of row k and column k at time k.  Phase 2 (row/col panels) consumes
+#   the diagonal snapshots and records full panel snapshots at time k.
+#   Phase 3 (outer tiles) replays the per-pivot updates from the column-
+#   and row-panel snapshots.  Each (cell, pivot) update therefore sees
+#   exactly the operands the sequential algorithm saw, in the same order,
+#   evaluated by the same jnp expressions — float32 equality is bitwise,
+#   not approximate (no re-association anywhere).
+# * Phase 3 must *skip* the pivot row/col tiles (min is idempotent for D,
+#   but N's tie-accumulation is not) — they were already updated exactly
+#   once by phases 1/2.
+#
+# D and N live in HBM between the per-pivot-block pallas_calls (a host
+# Python loop unrolled at trace time); each grid program touches only
+# (bt, bt) tiles, so VMEM stays O(bt^2) regardless of V.
+# ---------------------------------------------------------------------------
+
+def _fw_init_counts(W: jnp.ndarray) -> jnp.ndarray:
+    """N0: 1 for finite off-diagonal edges, identity diagonal (== ref)."""
+    V = W.shape[-1]
+    eye = jnp.eye(V, dtype=bool)
+    return jnp.where((W < INF_CUT) & ~eye, 1.0, 0.0) + eye.astype(W.dtype)
+
+
+def _fw_step(Td, Tn, a_d, a_n, b_d, b_n, mask):
+    """One rank-1 pivot update on a tile — the exact ref.fw_counts_ref
+    expressions (operand order preserved for bitwise equality).  ``mask``
+    is the ``notk`` mask restricted to the tile (or None when the tile
+    provably excludes row/col k)."""
+    cand = a_d + b_d
+    ncand = jnp.minimum(a_n * b_n, _COUNT_CLIP)
+    lt = cand < Td
+    eq = (cand == Td) & (cand < INF_CUT)
+    if mask is not None:
+        lt = lt & mask
+        eq = eq & mask
+    Td = jnp.where(lt, cand, Td)
+    Tn = jnp.where(lt, ncand, Tn + jnp.where(eq, ncand, 0.0))
+    Tn = jnp.minimum(Tn, _COUNT_CLIP)
+    return Td, Tn
+
+
+def _fw_diag_kernel(d_ref, n_ref, do_ref, no_ref, rd_ref, rn_ref,
+                    cd_ref, cn_ref, *, bt: int):
+    """Phase 1: relax the (bt, bt) pivot block over its own bt pivots,
+    emitting per-pivot row snapshots (rd/rn, row k at time k) and column
+    snapshots (cd/cn, column k at time k)."""
+    row = jax.lax.broadcasted_iota(jnp.int32, (bt, bt), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (bt, bt), 1)
+
+    def body(k, carry):
+        D, N, RD, RN, CD, CN = carry
+        b_d = jax.lax.dynamic_slice(D, (k, 0), (1, bt))   # row k @ time k
+        b_n = jax.lax.dynamic_slice(N, (k, 0), (1, bt))
+        a_d = jax.lax.dynamic_slice(D, (0, k), (bt, 1))   # col k @ time k
+        a_n = jax.lax.dynamic_slice(N, (0, k), (bt, 1))
+        RD = jax.lax.dynamic_update_slice(RD, b_d, (k, 0))
+        RN = jax.lax.dynamic_update_slice(RN, b_n, (k, 0))
+        CD = jax.lax.dynamic_update_slice(CD, a_d, (0, k))
+        CN = jax.lax.dynamic_update_slice(CN, a_n, (0, k))
+        D, N = _fw_step(D, N, a_d, a_n, b_d, b_n, (row != k) & (col != k))
+        return D, N, RD, RN, CD, CN
+
+    z = jnp.zeros((bt, bt), d_ref.dtype)
+    D, N, RD, RN, CD, CN = jax.lax.fori_loop(
+        0, bt, body, (d_ref[0], n_ref[0], z, z, z, z))
+    do_ref[0], no_ref[0] = D, N
+    rd_ref[0], rn_ref[0] = RD, RN
+    cd_ref[0], cn_ref[0] = CD, CN
+
+
+def _fw_panel_kernel(d_ref, n_ref, sd_ref, sn_ref, dd_ref, dn_ref,
+                     ds2_ref, ds3_ref, od_ref, on_ref, pd_ref, pn_ref,
+                     *, bt: int, kk: int, is_row: bool):
+    """Phase 2: relax one (bt, bt) panel tile over the block's bt pivots,
+    consuming the diagonal snapshots (sd/sn) and emitting this panel's own
+    per-pivot snapshots (pd/pn).  The tile at the pivot block itself
+    (j == kk) copies phase 1's results instead of re-updating (N's
+    tie-accumulation is not idempotent).
+
+    Row panels (is_row): tile rows are the pivot rows; the pivot's "a"
+    operand D[i, k] is the diagonal *column* snapshot, the "b" operand
+    D[k, j] is the tile's own row k (masked at pivot k, so current ==
+    time-k).  Col panels are the transpose."""
+    j = pl.program_id(1)
+
+    @pl.when(j == kk)
+    def _copy_diag():
+        od_ref[0], on_ref[0] = dd_ref[0], dn_ref[0]
+        pd_ref[0], pn_ref[0] = ds2_ref[0], ds3_ref[0]
+
+    @pl.when(j != kk)
+    def _relax():
+        SD, SN = sd_ref[0], sn_ref[0]
+        iot = jax.lax.broadcasted_iota(jnp.int32, (bt, bt), 0 if is_row
+                                       else 1)
+
+        def body(k, carry):
+            D, N, PD, PN = carry
+            if is_row:
+                own_d = jax.lax.dynamic_slice(D, (k, 0), (1, bt))
+                own_n = jax.lax.dynamic_slice(N, (k, 0), (1, bt))
+                PD = jax.lax.dynamic_update_slice(PD, own_d, (k, 0))
+                PN = jax.lax.dynamic_update_slice(PN, own_n, (k, 0))
+                a_d = jax.lax.dynamic_slice(SD, (0, k), (bt, 1))
+                a_n = jax.lax.dynamic_slice(SN, (0, k), (bt, 1))
+                b_d, b_n = own_d, own_n
+            else:
+                own_d = jax.lax.dynamic_slice(D, (0, k), (bt, 1))
+                own_n = jax.lax.dynamic_slice(N, (0, k), (bt, 1))
+                PD = jax.lax.dynamic_update_slice(PD, own_d, (0, k))
+                PN = jax.lax.dynamic_update_slice(PN, own_n, (0, k))
+                b_d = jax.lax.dynamic_slice(SD, (k, 0), (1, bt))
+                b_n = jax.lax.dynamic_slice(SN, (k, 0), (1, bt))
+                a_d, a_n = own_d, own_n
+            D, N = _fw_step(D, N, a_d, a_n, b_d, b_n, iot != k)
+            return D, N, PD, PN
+
+        z = jnp.zeros((bt, bt), d_ref.dtype)
+        D, N, PD, PN = jax.lax.fori_loop(
+            0, bt, body, (d_ref[0], n_ref[0], z, z))
+        od_ref[0], on_ref[0] = D, N
+        pd_ref[0], pn_ref[0] = PD, PN
+
+
+def _fw_outer_kernel(d_ref, n_ref, cd_ref, cn_ref, rd_ref, rn_ref,
+                     od_ref, on_ref, *, bt: int, kk: int):
+    """Phase 3: replay the block's bt pivots on one outer (bt, bt) tile
+    from the col-panel (cd/cn) and row-panel (rd/rn) snapshots.  Pivot
+    row/col tiles pass through unchanged — they were already updated by
+    phases 1/2 (re-applying would double-count N ties)."""
+    i, j = pl.program_id(1), pl.program_id(2)
+
+    @pl.when((i == kk) | (j == kk))
+    def _copy():
+        od_ref[0], on_ref[0] = d_ref[0], n_ref[0]
+
+    @pl.when((i != kk) & (j != kk))
+    def _relax():
+        CD, CN = cd_ref[0], cn_ref[0]
+        RD, RN = rd_ref[0], rn_ref[0]
+
+        def body(k, carry):
+            D, N = carry
+            a_d = jax.lax.dynamic_slice(CD, (0, k), (bt, 1))
+            a_n = jax.lax.dynamic_slice(CN, (0, k), (bt, 1))
+            b_d = jax.lax.dynamic_slice(RD, (k, 0), (1, bt))
+            b_n = jax.lax.dynamic_slice(RN, (k, 0), (1, bt))
+            return _fw_step(D, N, a_d, a_n, b_d, b_n, None)
+
+        D, N = jax.lax.fori_loop(0, bt, body, (d_ref[0], n_ref[0]))
+        od_ref[0], on_ref[0] = D, N
+
+
+def fw_counts_tiled_pallas(W: jnp.ndarray, *, bt: int = 128,
+                           interpret: bool | None = None
+                           ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Blocked three-phase FW + path counts; bit-for-bit == fw_counts_ref.
+
+    W: [B, V, V] (or [V, V]) float32 with 0 diagonal.  V is padded to a
+    multiple of ``bt`` with isolated nodes.  Per-grid-program working set
+    is O(bt^2) — use this when 3 x V^2 x 4B exceeds VMEM (see
+    ``ops.FW_TILED_AUTO_V`` for the dispatch knee).
+    """
+    interpret = _resolve_interpret(interpret)
+    squeeze = W.ndim == 2
+    if squeeze:
+        W = W[None]
+    B, V0, _ = W.shape
+    Vt = max(bt, -(-V0 // bt) * bt)
+    nb = Vt // bt
+    W = _pad_isolated(W, Vt)
+    D, N = W, _fw_init_counts(W)
+
+    spec = pl.BlockSpec((1, bt, bt), lambda b: (b, 0, 0))
+    shp = jax.ShapeDtypeStruct((B, bt, bt), W.dtype)
+
+    for kk in range(nb):
+        k0 = kk * bt
+        # -- phase 1: pivot block + per-pivot row/col snapshots ------------
+        dD = jax.lax.dynamic_slice(D, (0, k0, k0), (B, bt, bt))
+        dN = jax.lax.dynamic_slice(N, (0, k0, k0), (B, bt, bt))
+        dD2, dN2, rdD, rdN, cdD, cdN = pl.pallas_call(
+            functools.partial(_fw_diag_kernel, bt=bt),
+            grid=(B,),
+            in_specs=[spec, spec],
+            out_specs=[spec] * 6,
+            out_shape=[shp] * 6,
+            compiler_params=_compat.CompilerParams(
+                dimension_semantics=("parallel",)),
+            interpret=interpret,
+        )(dD, dN)
+
+        # -- phase 2: row + col panels, emitting panel snapshots -----------
+        tile_j = pl.BlockSpec((1, bt, bt), lambda b, j: (b, 0, j))
+        tile_i = pl.BlockSpec((1, bt, bt), lambda b, j: (b, j, 0))
+        fixed = pl.BlockSpec((1, bt, bt), lambda b, j: (b, 0, 0))
+        row_shp = jax.ShapeDtypeStruct((B, bt, Vt), W.dtype)
+        col_shp = jax.ShapeDtypeStruct((B, Vt, bt), W.dtype)
+        rowD = jax.lax.dynamic_slice(D, (0, k0, 0), (B, bt, Vt))
+        rowN = jax.lax.dynamic_slice(N, (0, k0, 0), (B, bt, Vt))
+        rowD2, rowN2, rsD, rsN = pl.pallas_call(
+            functools.partial(_fw_panel_kernel, bt=bt, kk=kk, is_row=True),
+            grid=(B, nb),
+            in_specs=[tile_j, tile_j] + [fixed] * 6,
+            out_specs=[tile_j] * 4,
+            out_shape=[row_shp] * 4,
+            compiler_params=_compat.CompilerParams(
+                dimension_semantics=("parallel", "parallel")),
+            interpret=interpret,
+        )(rowD, rowN, cdD, cdN, dD2, dN2, rdD, rdN)
+        colD = jax.lax.dynamic_slice(D, (0, 0, k0), (B, Vt, bt))
+        colN = jax.lax.dynamic_slice(N, (0, 0, k0), (B, Vt, bt))
+        colD2, colN2, csD, csN = pl.pallas_call(
+            functools.partial(_fw_panel_kernel, bt=bt, kk=kk, is_row=False),
+            grid=(B, nb),
+            in_specs=[tile_i, tile_i] + [fixed] * 6,
+            out_specs=[tile_i] * 4,
+            out_shape=[col_shp] * 4,
+            compiler_params=_compat.CompilerParams(
+                dimension_semantics=("parallel", "parallel")),
+            interpret=interpret,
+        )(colD, colN, rdD, rdN, dD2, dN2, cdD, cdN)
+        D = jax.lax.dynamic_update_slice(D, rowD2, (0, k0, 0))
+        N = jax.lax.dynamic_update_slice(N, rowN2, (0, k0, 0))
+        D = jax.lax.dynamic_update_slice(D, colD2, (0, 0, k0))
+        N = jax.lax.dynamic_update_slice(N, colN2, (0, 0, k0))
+
+        # -- phase 3: outer tiles from the panel snapshots -----------------
+        full = pl.BlockSpec((1, bt, bt), lambda b, i, j: (b, i, j))
+        cpan = pl.BlockSpec((1, bt, bt), lambda b, i, j: (b, i, 0))
+        rpan = pl.BlockSpec((1, bt, bt), lambda b, i, j: (b, 0, j))
+        D, N = pl.pallas_call(
+            functools.partial(_fw_outer_kernel, bt=bt, kk=kk),
+            grid=(B, nb, nb),
+            in_specs=[full, full, cpan, cpan, rpan, rpan],
+            out_specs=[full, full],
+            out_shape=[jax.ShapeDtypeStruct((B, Vt, Vt), W.dtype)] * 2,
+            compiler_params=_compat.CompilerParams(
+                dimension_semantics=("parallel", "parallel", "parallel")),
+            interpret=interpret,
+        )(D, N, csD, csN, rsD, rsN)
+
     D, N = D[:, :V0, :V0], N[:, :V0, :V0]
     if squeeze:
         D, N = D[0], N[0]
@@ -126,12 +418,13 @@ def _minplus_kernel(a_ref, b_ref, o_ref, *, bk: int):
 
 def minplus_tiled_pallas(A: jnp.ndarray, B: jnp.ndarray, *,
                          bm: int = 128, bn: int = 128, bk: int = 128,
-                         interpret: bool = True) -> jnp.ndarray:
+                         interpret: bool | None = None) -> jnp.ndarray:
     """Tropical matmul out[i,j] = min_k A[i,k] + B[k,j], tiled for VMEM.
 
     A: [M, K], B: [K, N]; M, N, K padded to tile multiples with +INF
     (identity of min) — padding never wins the min.
     """
+    interpret = _resolve_interpret(interpret)
     M, K = A.shape
     K2, N = B.shape
     assert K == K2
@@ -152,12 +445,17 @@ def minplus_tiled_pallas(A: jnp.ndarray, B: jnp.ndarray, *,
     return out[:M, :N]
 
 
-def apsp_tiled_pallas(W: jnp.ndarray, *, interpret: bool = True,
+def apsp_tiled_pallas(W: jnp.ndarray, *, interpret: bool | None = None,
                       **tile_kw) -> jnp.ndarray:
-    """APSP by repeated tiled min-plus squaring (distances only)."""
+    """APSP by repeated tiled min-plus squaring (distances only).
+
+    ceil(log2(V-1)) squarings suffice: after t rounds D covers all paths
+    of <= 2^t hops, and a shortest path has at most V-1 hops.  V is a
+    Python int here, so the count is host math, not a traced op.
+    """
     V = W.shape[-1]
     D = W
-    n_iter = max(1, int(jnp.ceil(jnp.log2(max(V - 1, 2)))))
+    n_iter = max(1, math.ceil(math.log2(max(V - 1, 2))))
     for _ in range(n_iter):
         D = jnp.minimum(D, minplus_tiled_pallas(D, D, interpret=interpret,
                                                 **tile_kw))

@@ -17,7 +17,8 @@ import jax.numpy as jnp
 from . import ref
 from .decode_attention import decode_attention_pallas
 from .flash_attention import flash_attention_pallas
-from .minplus import apsp_tiled_pallas, fw_counts_pallas, minplus_tiled_pallas
+from .minplus import (apsp_tiled_pallas, fw_counts_pallas,
+                      fw_counts_tiled_pallas, minplus_tiled_pallas)
 from .rglru_scan import rglru_scan_pallas
 from .selective_scan import selective_scan_pallas
 
@@ -106,3 +107,27 @@ def fw_impl_pallas(W):
 
 
 fw_impl_ref = ref.fw_counts_ref
+
+# Above this padded V the VMEM-resident FW's working set (~3 x Vp^2 x 4B
+# for W, D, N) no longer fits a 16 MB TPU VMEM budget: 768 -> ~6.8 MB
+# fits, the next 128-multiple (896 -> ~9.2 MB plus scratch) is already
+# marginal and 1024 -> ~12.6 MB fails in practice.  The blocked-tile FW
+# keeps O(bt^2) per grid program regardless of V.
+FW_TILED_AUTO_V = 768
+
+
+def fw_counts_tiled(W: jnp.ndarray, *, bt: int = 128
+                    ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Blocked-tile FW + path counts (bit-for-bit == fw_counts_ref)."""
+    return fw_counts_tiled_pallas(W, bt=bt, interpret=_interp())
+
+
+def fw_impl_tiled(W):
+    """Size-dispatched FW scorer impl: VMEM-resident kernel while the
+    padded V fits (< FW_TILED_AUTO_V), blocked-tile kernel beyond.  Both
+    are bit-for-bit equal to ``fw_counts_ref``, so the dispatch point is
+    invisible in results."""
+    V = W.shape[-1]
+    if max(128, -(-V // 128) * 128) <= FW_TILED_AUTO_V:
+        return fw_counts_pallas(W, interpret=_interp())
+    return fw_counts_tiled_pallas(W, interpret=_interp())

@@ -6,6 +6,8 @@ dtype sweeps in ``tests/test_kernels_*.py``.
 """
 from __future__ import annotations
 
+import math
+
 import jax
 import jax.numpy as jnp
 
@@ -26,7 +28,7 @@ def apsp_ref(W: jnp.ndarray) -> jnp.ndarray:
     """All-pairs shortest path distances by repeated min-plus squaring."""
     V = W.shape[-1]
     D = W
-    n = max(1, int(jnp.ceil(jnp.log2(jnp.maximum(V - 1, 2)))))
+    n = max(1, math.ceil(math.log2(max(V - 1, 2))))
     for _ in range(n):
         D = jnp.minimum(D, minplus_ref(D, D))
     return D

@@ -45,7 +45,7 @@ from ..core.api import (DesignRequest, DesignResponse, DesignUpdate,
                         RunRecord, algo_seed, make_evaluator, make_rep,
                         stackable_steps)
 from ..core.cache import LRUCache
-from ..core.chiplets import paper_arch
+from ..core.chiplets import resolve_arch
 from ..core.optimize import _request_parts, score_stacked
 from ..core.pareto import (IncrementalFront, archive_candidates,
                            candidates_from_records)
@@ -203,7 +203,7 @@ class DesignEngine:
         so tenants never share (and so cross-pollute) archives; the norm
         draw is seed-deterministic, so re-building after an eviction
         returns identical evaluators."""
-        arch = paper_arch(cfg.arch, cfg.config)
+        arch = resolve_arch(cfg.arch, cfg.config)
         nkey = (cfg.arch, cfg.config, cfg.seed, cfg.norm_samples, cfg.chunk,
                 cfg.backend, cfg.mutation_mode, cfg.objective.normalizer)
         key = nkey + (cfg.objective, cfg.schedule, cfg.archive_k, salt)

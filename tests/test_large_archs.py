@@ -1,0 +1,143 @@
+"""100+-chiplet arch families (PR 7): resolve_arch, hex masks, pipeline.
+
+The HexaMesh-regime archs (homog100/homog144/homog256 on full square
+grids, hex127 on the centered-hexagonal mask) must flow through the same
+seams as the paper archs: ``resolve_arch`` -> ``make_rep`` (mask-aware
+``HomogRep``) -> batched device operators -> ``run_sweep``.  The scorer's
+chunk clamp keeps large-V scoring inside a fixed element budget without
+changing results (chunk-invariance).
+"""
+import jax
+import numpy as np
+import pytest
+
+from _invariants import assert_valid_homog_batch
+
+from repro.core import api
+from repro.core.chiplets import LARGE_HOMOG, paper_arch, resolve_arch
+from repro.core.placement_homog import hex_mask
+
+
+def test_resolve_arch_names():
+    for name, (nc, nm, ni) in LARGE_HOMOG.items():
+        arch = resolve_arch(name)
+        assert len(arch.chiplets) == nc + nm + ni
+    # paper names still resolve to the paper archs
+    assert resolve_arch("homog32").name == paper_arch("homog32").name
+    with pytest.raises(ValueError):
+        resolve_arch("homog999")
+
+
+def test_arch_family_and_defaults():
+    # "hex127" has no homog prefix / 32/64 substring; the large-name
+    # special case must keep it out of the hetero-64 bucket.
+    assert api.arch_family("hex127") == ("homog", 127)
+    assert api.arch_family("homog100") == ("homog", 100)
+    assert api.arch_family("homog32") == ("homog", 32)
+    d = api.paper_defaults("hex127")
+    assert d.mutation_mode == "neighbor-one"
+    # paper archs keep their Table III/IV defaults
+    assert api.paper_defaults("homog32").ga.population == 200
+
+
+def test_hex_mask_geometry():
+    m = hex_mask(7)
+    assert m.shape == (13, 13)
+    assert int(m.sum()) == 127                    # centered hexagonal n=7
+    assert np.array_equal(m, m[::-1])   # row widths mirror top/bottom
+    # rows are contiguous spans: width == span between first/last True
+    for row in m:
+        idx = np.flatnonzero(row)
+        assert idx[-1] - idx[0] + 1 == len(idx)
+    assert int(m[6].sum()) == 13 and int(m[0].sum()) == 7
+
+
+@pytest.fixture(scope="module")
+def hexrep():
+    arch = resolve_arch("hex127")
+    return api.make_rep(arch, "hex127")
+
+
+def test_hex127_rep_shape(hexrep):
+    assert (hexrep.R, hexrep.C) == (13, 13)
+    assert hexrep.allowed is not None
+    # area counts only allowed cells, not the full 13x13 bounding box
+    sz = hexrep.arch.chiplets[0].w * hexrep.arch.chiplets[0].h
+    assert hexrep.area == pytest.approx(sz * 127)
+
+
+def test_hex127_host_ops_respect_mask(hexrep):
+    rng = np.random.default_rng(0)
+    off = ~hexrep.allowed
+    s = hexrep.random(rng)
+    assert (s[0][off] == -1).all()
+    for _ in range(5):
+        s = hexrep.mutate(s, rng)
+        assert (s[0][off] == -1).all()
+    s2 = hexrep.random(rng)
+    sm = hexrep.merge(s, s2, rng)
+    assert (sm[0][off] == -1).all()
+    for kind, ids in hexrep._kind_instances.items():
+        assert (sm[0] == kind).sum() == len(ids)
+
+
+def test_hex127_device_ops_respect_mask(hexrep):
+    ops = hexrep.batch_ops()
+    off = ~hexrep.allowed
+    k0, k1, k2 = jax.random.split(jax.random.PRNGKey(0), 3)
+    t, r = ops.random_batch(k0, 6)
+    assert_valid_homog_batch(hexrep, t, r)
+    assert (np.asarray(t)[:, off] == -1).all()
+    mt, mr = ops.mutate_batch(k1, t, r)
+    assert_valid_homog_batch(hexrep, mt, mr)
+    assert (np.asarray(mt)[:, off] == -1).all()
+    gt, gr = ops.merge_batch(k2, t, r, mt, mr)
+    assert_valid_homog_batch(hexrep, gt, gr)
+    assert (np.asarray(gt)[:, off] == -1).all()
+
+
+def test_unmasked_rep_unchanged():
+    # A degenerate all-True mask must normalize away (no special-casing
+    # downstream, stage-cache key stays the unmasked one).
+    from repro.core.placement_homog import HomogRep
+    arch = paper_arch("homog32")
+    rep = HomogRep(arch, R=8, C=5,
+                   allowed=np.ones((8, 5), bool))
+    assert rep.allowed is None
+
+
+def test_homog100_run_sweep_smoke():
+    """The 100+-chiplet family end-to-end through run_sweep (V=552):
+    host-validity BR with a tiny budget so the smoke stays bounded."""
+    cfg = api.ExperimentConfig(
+        arch="homog100", algorithms=("br",),
+        budget=api.Budget(evals=4), repetitions=1, seed=0,
+        norm_samples=2, chunk=4, backend="fw-ref",
+        params={"br": api.BRParams(batch=4)})
+    res = api.run_sweep([cfg])
+    rec = res.records[0]
+    assert np.isfinite(rec.result.best_cost)
+    types = rec.result.best_sol[0]
+    assert (types >= 0).sum() == 100              # all chiplets placed
+
+
+def test_chunk_clamp_is_result_invariant(monkeypatch):
+    """Force the clamp active (tiny element budget -> eff chunk 1) and
+    check scores are bit-for-bit the unclamped scorer's: the clamp may
+    only change batching, never results."""
+    from repro.core import proxies
+    from repro.core.optimize import DevicePipeline, Evaluator
+
+    arch = paper_arch("homog32")
+    rep = api.make_rep(arch, "homog32")
+    ev = Evaluator(rep, arch, rng=np.random.default_rng(0), norm_samples=2)
+    pipe = DevicePipeline(ev)
+    _, _, g = pipe._gen(jax.random.PRNGKey(0), 5)
+    base = {k: np.asarray(v) for k, v in ev.score_batch(dict(g)).items()}
+
+    monkeypatch.setattr(proxies, "_CHUNK_ELEM_BUDGET", 1)
+    clamped_scorer = proxies.make_scorer(rep.layout, chunk=16)
+    clamped = {k: np.asarray(v)
+               for k, v in clamped_scorer(dict(g)).items()}
+    for k in ("lat_c2m", "thr_c2m", "area", "connected"):
+        assert np.array_equal(base[k], clamped[k]), k

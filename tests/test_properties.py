@@ -193,3 +193,103 @@ def test_hetero_operator_invariants_seeds(hrep, hops, seed):
 @pytest.mark.parametrize("seed", FALLBACK_SEEDS)
 def test_hetero_boruvka_vs_kruskal_seeds(hrep, hops, hgb, seed):
     check_hetero_boruvka_matches_kruskal(hrep, hops, hgb, seed)
+
+
+# ---------------------------------------------------------------------------
+# Blocked-tile FW + path counts (PR 7): bit-for-bit parity with the
+# sequential reference on randomized sparse/disconnected graphs and on
+# every paper arch's real scoring matrix, plus count-clip saturation.
+# ---------------------------------------------------------------------------
+
+import functools
+
+import jax.numpy as jnp
+
+from repro.kernels import ref as kref
+from repro.kernels.minplus import _COUNT_CLIP, fw_counts_tiled_pallas
+
+# One jitted instance per tile size so repeated property draws share the
+# compiled executable instead of re-tracing per seed.
+_TILED16 = jax.jit(functools.partial(fw_counts_tiled_pallas, bt=16))
+_TILED128 = jax.jit(functools.partial(fw_counts_tiled_pallas, bt=128))
+_FW_REF = jax.jit(kref.fw_counts_ref)
+
+
+def check_fw_tiled_random(seed: int):
+    """Random INF-heavy graph (disconnected components common): the tiled
+    kernel must match the reference bit-for-bit on D and N."""
+    rng = np.random.default_rng(seed)
+    V = int(rng.integers(9, 40))
+    W = np.full((2, V, V), 1e9, np.float32)
+    for b in range(2):
+        np.fill_diagonal(W[b], 0.0)
+        n_edges = int(rng.integers(0, 3 * V))   # 0 => fully disconnected
+        if n_edges:
+            i = rng.integers(0, V, n_edges)
+            j = rng.integers(0, V, n_edges)
+            w = rng.integers(1, 9, n_edges).astype(np.float32)
+            W[b, i, j] = np.minimum(W[b, i, j], w)
+            W[b, j, i] = np.minimum(W[b, j, i], w)
+            np.fill_diagonal(W[b], 0.0)
+    Wj = jnp.asarray(W)
+    D1, N1 = _TILED16(Wj)
+    D2, N2 = _FW_REF(Wj)
+    assert np.array_equal(np.asarray(D1), np.asarray(D2))
+    assert np.array_equal(np.asarray(N1), np.asarray(N2))
+
+
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+@settings(max_examples=6, deadline=None)
+def test_fw_tiled_random_graphs_property(seed):
+    check_fw_tiled_random(seed)
+
+
+@pytest.mark.skipif(HAVE_HYPOTHESIS,
+                    reason="hypothesis drives the property above")
+@pytest.mark.parametrize("seed", FALLBACK_SEEDS)
+def test_fw_tiled_random_graphs_seeds(seed):
+    check_fw_tiled_random(seed)
+
+
+@pytest.mark.parametrize("arch_name", ["homog32", "homog64",
+                                       "hetero32", "hetero64"])
+def test_fw_tiled_paper_arch_parity(arch_name):
+    """Bit-for-bit D and N on the real scoring matrix of each paper arch
+    (the acceptance criterion for the fw-tiled backend)."""
+    from repro.core.api import make_rep
+    arch = paper_arch(arch_name, "baseline")
+    rep = make_rep(arch, arch_name)
+    rng = np.random.default_rng(5)
+    W = jnp.asarray(rep.score_graph(rep.random(rng)).W)
+    D1, N1 = _TILED128(W)
+    D2, N2 = _FW_REF(W)
+    assert np.array_equal(np.asarray(D1), np.asarray(D2))
+    assert np.array_equal(np.asarray(N1), np.asarray(N2))
+
+
+def test_fw_tiled_count_clip_saturation():
+    """K layered stages of M parallel midpoints give M^(K-1) shortest
+    paths — far past _COUNT_CLIP, so both kernels must saturate to the
+    clip identically (and bit-for-bit vs each other)."""
+    M, K = 10, 32
+    V = 2 + (K - 1) * M
+    W = np.full((V, V), 1e9, np.float32)
+    np.fill_diagonal(W, 0.0)
+
+    def node(stage, m):
+        if stage == 0:
+            return 0
+        if stage == K:
+            return 1
+        return 2 + (stage - 1) * M + m
+
+    for s in range(K):
+        for ma in range(M if s > 0 else 1):
+            for mb in range(M if s < K - 1 else 1):
+                W[node(s, ma), node(s + 1, mb)] = 1.0
+    Wj = jnp.asarray(W)
+    D1, N1 = _TILED128(Wj)
+    D2, N2 = _FW_REF(Wj)
+    assert np.array_equal(np.asarray(D1), np.asarray(D2))
+    assert np.array_equal(np.asarray(N1), np.asarray(N2))
+    assert float(N1[0, 1]) == np.float32(_COUNT_CLIP)
