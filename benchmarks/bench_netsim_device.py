@@ -1,0 +1,155 @@
+"""Beyond-paper: device-resident netsim rate model (PR 8).
+
+Two claims:
+
+* ``rate_model_throughput`` — scoring traffic against a workload with the
+  batched device rate model is cheaper per placement than event-driven
+  host simulation of the same trace, and the gap widens with trace
+  length: host cost scales with the packet count, the rate model's does
+  not (it is also fused into the search scorer, where the FW pass is
+  shared with the proxy metrics).  That is what makes traffic a
+  searchable objective instead of a post-hoc check.
+* ``trace_guided_search`` — under the same budget and seed, a sweep whose
+  objective carries the ``trace-lat`` term lands on a placement with a
+  *lower host-simulated trace latency* than the proxy-only sweep; and
+  swapping workloads between configs compiles no extra scorers (demand is
+  a runtime operand).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core.api import (Budget, ExperimentConfig, make_rep, run_sweep,
+                            clear_scorer_cache)
+from repro.core.baseline import MeshBaseline
+from repro.core.chiplets import paper_arch
+from repro.core.netsim import ChipletNet, NetSim
+from repro.core.objective import Objective, TermSpec
+from repro.core.topology import stack_graphs
+from repro.core.traces import TraceRegion, generate_trace
+from repro.netsim import Workload, make_trace_model
+
+from .common import budget, emit, out_dir
+
+
+def _trace_workload(arch, quick):
+    _, geo_b, links_b = MeshBaseline(arch).build()
+    net_base = ChipletNet.from_links(arch, geo_b, links_b)
+    regions = (TraceRegion(budget(quick, 5000, 20000),
+                           budget(quick, 20000, 80000)),)
+    trace = generate_trace(net_base, regions, seed=7)
+    cycles = sum(r.n_cycles for r in regions)
+    wl = Workload.from_trace(trace, arch.kinds(), cycles, name="parsec-like")
+    return net_base, trace, wl
+
+
+def bench_throughput(quick: bool) -> dict:
+    """Placements/s: device rate model (batched) vs host event sim."""
+    arch = paper_arch("homog32", "baseline")
+    rep = make_rep(arch, "homog32", None)
+    _, trace, wl = _trace_workload(arch, quick)
+    P = budget(quick, 64, 256)
+    rng = np.random.default_rng(0)
+    sols, graphs, nets = [], [], []
+    while len(sols) < P:
+        s = rep.random(rng)
+        g = rep.score_graph(s)
+        if not g.connected:
+            continue
+        sols.append(s)
+        graphs.append(g)
+        links, _ = rep.links_of(s)
+        nets.append(ChipletNet.from_links(arch, rep.geometry(s), links))
+    batch = stack_graphs(graphs)
+    model = make_trace_model(rep.layout)
+    dem = wl.vec()
+    np.asarray(model(batch, dem)["trace_lat_c2m"])   # compile + warm up
+    t0 = time.perf_counter()
+    reps = budget(quick, 3, 10)
+    for _ in range(reps):
+        out = model(batch, dem)
+        np.asarray(out["trace_lat_c2m"])
+    dev_s = (time.perf_counter() - t0) / reps
+    dev_rate = P / dev_s
+
+    n_host = min(budget(quick, 6, 16), P)
+    t0 = time.perf_counter()
+    for net in nets[:n_host]:
+        ok = [p for p in trace if net.next_hop[p.src, p.dst] >= 0]
+        NetSim(net, arch).run(ok, mode="authentic")
+    host_s = (time.perf_counter() - t0) / n_host
+    host_rate = 1.0 / host_s
+    speedup = dev_rate / host_rate
+    emit("netsim_device_placements_per_s", round(dev_rate, 1),
+         f"batch={P}")
+    emit("netsim_host_placements_per_s", round(host_rate, 2),
+         f"trace={len(trace)}pk")
+    emit("netsim_device_vs_host_speedup", round(speedup, 1))
+    return dict(batch=P, device_placements_per_s=dev_rate,
+                host_placements_per_s=host_rate, speedup=speedup)
+
+
+def bench_guided(quick: bool) -> dict:
+    """trace-lat-guided sweep vs proxy-only sweep, host-simulated."""
+    arch = paper_arch("homog32", "placeit")
+    rep = make_rep(arch, "homog32", None)
+    net_base, trace, wl = _trace_workload(arch, quick)
+    guided_obj = Objective().with_terms(TermSpec("trace-lat", weight=2.0))
+
+    def host_latency(sol):
+        links, _ = rep.links_of(sol)
+        net = ChipletNet.from_links(arch, rep.geometry(sol), links)
+        ok = [p for p in trace if net.next_hop[p.src, p.dst] >= 0]
+        return NetSim(net, arch).run(ok, mode="authentic").avg_latency
+
+    lat_mesh = NetSim(net_base, arch).run(trace).avg_latency
+    evals = budget(quick, 400, 1500)
+    seeds = range(budget(quick, 1, 3))
+    per_seed = {}
+    wins = 0
+    clear_scorer_cache()
+    for seed in seeds:
+        base = dict(arch="homog32", config="placeit", algorithms=("ga",),
+                    budget=Budget(evals=evals), norm_samples=32, chunk=16,
+                    seed=seed)
+        res = run_sweep([
+            ExperimentConfig(**base),
+            ExperimentConfig(**base, objective=guided_obj, workload=wl),
+            # same objective structure, different workload: must not
+            # compile a third scorer (demand is a runtime operand)
+            ExperimentConfig(**base, objective=guided_obj,
+                             workload=wl.scaled(0.5)),
+        ])
+        built = res.stats.scorers_built
+        assert built <= 2, f"workload swap recompiled: {built} scorers"
+        lat_proxy = host_latency(res.runs[0].records[0].result.best_sol)
+        lat_guided = host_latency(res.runs[1].records[0].result.best_sol)
+        wins += int(lat_guided < lat_proxy)
+        per_seed[f"seed{seed}"] = dict(proxy=lat_proxy, guided=lat_guided,
+                                       scorers_built=built)
+        emit(f"netsim_guided_seed{seed}_host_lat", round(lat_guided, 2),
+             f"proxy={lat_proxy:.2f} mesh={lat_mesh:.2f}")
+    n = len(per_seed)
+    emit("netsim_guided_beats_proxy", f"{wins}/{n}")
+    return dict(mesh_baseline=lat_mesh, evals=evals, seeds=n,
+                guided_wins=wins, runs=per_seed)
+
+
+def run(quick: bool = True) -> dict:
+    results = dict(rate_model_throughput=bench_throughput(quick),
+                   trace_guided_search=bench_guided(quick))
+    with open(os.path.join(out_dir(), "netsim_device.json"), "w") as f:
+        json.dump(results, f, indent=1, default=float)
+    return results
+
+
+def main(quick: bool = True):
+    run(quick)
+
+
+if __name__ == "__main__":
+    main(quick=os.environ.get("BENCH_FULL", "") != "1")

@@ -32,6 +32,8 @@ MODULES = [
                         "scalarization grids (PR 5)"),
     ("design_service", "beyond-paper: continuous-batching design engine "
                        "vs sequential runs (PR 6)"),
+    ("netsim_device", "beyond-paper: device netsim rate model vs host "
+                      "sim + trace-guided search (PR 8)"),
     ("kernels", "kernel micro-benches"),
     ("bridge_roofline", "beyond-paper: bridge co-design + roofline"),
 ]

@@ -1,8 +1,9 @@
 #!/usr/bin/env sh
 # Tier-1 CI: fast test pass (slow-marked tests excluded) + quick bench
 # smokes for the pipeline-throughput (incl. the large-V blocked-tile FW
-# kernel section, which quick mode limits to homog100), pareto-frontier
-# and design-service benches (set CI_SKIP_BENCH=1 to skip them).
+# kernel section, which quick mode limits to homog100), pareto-frontier,
+# design-service and device-netsim benches (set CI_SKIP_BENCH=1 to skip
+# them).
 #   scripts/ci.sh [extra pytest args...]
 #
 # Coverage: when pytest-cov is installed, the test pass also reports
@@ -33,4 +34,6 @@ if [ "${CI_SKIP_BENCH:-0}" != "1" ]; then
         python -m benchmarks.run --only pareto
     PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
         python -m benchmarks.run --only design_service
+    PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+        python -m benchmarks.run --only netsim
 fi

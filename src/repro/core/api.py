@@ -418,7 +418,8 @@ def make_evaluator(rep, arch: ArchSpec, *, rng: np.random.Generator,
                    backend: str = "fw-ref", fw_impl=None,
                    objective: Objective | None = None,
                    schedule: Schedule | None = None,
-                   norm=None, archive_k: int = 0) -> Evaluator:
+                   norm=None, archive_k: int = 0,
+                   workload=None) -> Evaluator:
     """Evaluator wired to a named backend; raw ``fw_impl`` callables (the
     legacy hook) bypass the cache.  ``objective`` defaults to the default
     ``Objective`` built from the arch's (deprecated) ``w_*`` weights —
@@ -426,18 +427,23 @@ def make_evaluator(rep, arch: ArchSpec, *, rng: np.random.Generator,
     constraint-hardening weight ramps; ``norm`` re-uses an existing
     normalizer draw (see :class:`repro.core.optimize.Evaluator`);
     ``archive_k`` > 0 attaches a device-resident top-K population archive
-    (:class:`repro.core.optimize.PopArchive`)."""
+    (:class:`repro.core.optimize.PopArchive`); ``workload`` (a
+    :class:`repro.netsim.workload.Workload`) backs a ``trace-lat``
+    objective term — it is a runtime scorer operand, so it does not enter
+    the compiled-scorer cache key."""
     objective = (objective if objective is not None
                  else Objective.from_arch(arch))
     if fw_impl is not None:
         return Evaluator(rep, arch, rng=rng, norm_samples=norm_samples,
                          chunk=chunk, fw_impl=fw_impl, objective=objective,
-                         schedule=schedule, norm=norm, archive_k=archive_k)
+                         schedule=schedule, norm=norm, archive_k=archive_k,
+                         workload=workload)
     scorer = get_scorer(rep.layout, chunk=chunk, backend=backend,
                         objective=objective)
     return Evaluator(rep, arch, rng=rng, norm_samples=norm_samples,
                      chunk=chunk, scorer=scorer, objective=objective,
-                     schedule=schedule, norm=norm, archive_k=archive_k)
+                     schedule=schedule, norm=norm, archive_k=archive_k,
+                     workload=workload)
 
 
 # ---------------------------------------------------------------------------
@@ -474,12 +480,19 @@ class ExperimentConfig:
     # (cost, placement) row (repro.core.optimize.PopArchive) — thickens
     # Pareto fronts at no extra search cost.  0 = off (legacy behavior).
     archive_k: int = 0
+    # Traffic workload (repro.netsim.workload.Workload, or its dict form)
+    # backing a `trace-lat` objective term; None for proxy-only search.
+    workload: object | None = None
 
     def __post_init__(self):
         object.__setattr__(self, "algorithms", tuple(self.algorithms))
         if not isinstance(self.objective, Objective):
             object.__setattr__(self, "objective",
                               Objective.from_dict(self.objective))
+        if self.workload is not None and isinstance(self.workload, Mapping):
+            from repro.netsim.workload import Workload
+            object.__setattr__(self, "workload",
+                              Workload.from_dict(self.workload))
         if self.schedule is not None and \
                 not isinstance(self.schedule, Schedule):
             object.__setattr__(self, "schedule",
@@ -530,6 +543,8 @@ class ExperimentConfig:
             "schedule": (None if self.schedule is None
                          else self.schedule.to_dict()),
             "archive_k": self.archive_k,
+            "workload": (None if self.workload is None
+                         else self.workload.to_dict()),
         }
 
     @classmethod
@@ -560,8 +575,12 @@ class ExperimentConfig:
     def __hash__(self):
         # The generated field-tuple hash would choke on the params dict;
         # hash the canonical serialized form instead (consistent with
-        # __eq__, insensitive to params insertion order).
-        return hash(json.dumps(self.to_dict(), sort_keys=True))
+        # __eq__, insensitive to params insertion order).  Workloads hash
+        # by content digest instead of their full [K, n, n] rate payload.
+        d = self.to_dict()
+        if d.get("workload") is not None:
+            d["workload"] = self.workload.digest()
+        return hash(json.dumps(d, sort_keys=True))
 
 
 # ---------------------------------------------------------------------------
@@ -605,7 +624,8 @@ def run_experiment(config: ExperimentConfig, *, fw_impl=None
                             chunk=config.chunk, backend=config.backend,
                             fw_impl=fw_impl, objective=config.objective,
                             schedule=config.schedule,
-                            archive_k=config.archive_k)
+                            archive_k=config.archive_k,
+                            workload=config.workload)
         for entry in entries:
             t0 = time.monotonic()
             rng_a = np.random.default_rng(
@@ -627,7 +647,8 @@ def baseline_cost(config: ExperimentConfig, *, fw_impl=None
     ev = make_evaluator(rep, arch, rng=rng,
                         norm_samples=config.norm_samples,
                         chunk=config.chunk, backend=config.backend,
-                        fw_impl=fw_impl, objective=config.objective)
+                        fw_impl=fw_impl, objective=config.objective,
+                        workload=config.workload)
     g = MeshBaseline(arch).build()[0]
     metrics = ev.score([g])
     cost = float(np.asarray(ev.costs_from(metrics))[0])
@@ -964,7 +985,8 @@ def run_sweep(configs, *, fold_repetitions: bool = True,
         arch = resolve_arch(cfg.arch, cfg.config)
         nkey = (cfg.arch, cfg.config, cfg.seed, cfg.norm_samples, cfg.chunk,
                 cfg.backend, cfg.mutation_mode, cfg.objective.normalizer)
-        key = nkey + (cfg.objective, cfg.schedule, cfg.archive_k)
+        key = nkey + (cfg.objective, cfg.schedule, cfg.archive_k,
+                      cfg.workload)
         if key not in ev_cache:
             rng = np.random.default_rng(cfg.seed)
             rep = make_rep(arch, cfg.arch, cfg.mutation_mode)
@@ -974,7 +996,7 @@ def run_sweep(configs, *, fold_repetitions: bool = True,
                 chunk=cfg.chunk, backend=cfg.backend,
                 objective=cfg.objective, schedule=cfg.schedule,
                 norm=None if base is None else base.norm,
-                archive_k=cfg.archive_k)
+                archive_k=cfg.archive_k, workload=cfg.workload)
             if base is None:
                 norm_cache[nkey] = ev_cache[key]
         ev = ev_cache[key]

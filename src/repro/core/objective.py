@@ -414,6 +414,40 @@ def _node_degree(sample, norms, obj, params):
     return jnp.maximum(deg - cap, 0.0).sum()
 
 
+def _trace_lat_host(metrics, batch, norms, obj, params):
+    if "trace_lat_c2c" not in metrics:
+        raise KeyError(
+            "trace-lat host evaluation needs trace_lat_* metrics; score "
+            "through an evaluator built with a workload so the scorer "
+            "emits them")
+    acc = None
+    for t in TRAFFIC_TYPES:
+        v = (norms[f"w_lat_{t}"]
+             * np.asarray(metrics[f"trace_lat_{t}"], np.float64)
+             / max(norms[f"lat_{t}"], _EPS))
+        acc = v if acc is None else acc + v
+    return acc
+
+
+@register_objective_term("trace-lat", host_fn=_trace_lat_host)
+def _trace_lat(sample, norms, obj, params):
+    """Normalized traffic-weighted packet latency from the device netsim
+    rate model (``repro.netsim.model``): per traffic class, the
+    demand-weighted mean of path latency + per-hop router pipeline +
+    saturating ECMP queueing delay + serialization, under the class's
+    workload demand.  Requires an evaluator-attached workload
+    (``ExperimentConfig(workload=...)``), which enters the scorer as the
+    runtime ``_demand`` operand — swapping traces or injection rates
+    never retraces.  Normalized by the same per-class latency scale as
+    the ``lat`` proxy term (both are cycles), weighted by the runtime
+    traffic-mix weights."""
+    acc = 0.0
+    for t in TRAFFIC_TYPES:
+        acc = acc + (norms[f"w_lat_{t}"] * sample[f"trace_lat_{t}"]
+                     / jnp.maximum(norms[f"lat_{t}"], _EPS))
+    return acc
+
+
 # ---------------------------------------------------------------------------
 # Compilation: Objective -> per-placement device cost function.
 # ---------------------------------------------------------------------------

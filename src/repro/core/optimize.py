@@ -183,12 +183,31 @@ class Evaluator:
                  norm_samples: int = 500, chunk: int = 16, fw_impl=None,
                  scorer=None, objective: Objective | None = None,
                  schedule=None, norm: CostNormalizers | None = None,
-                 archive_k: int = 0):
+                 archive_k: int = 0, workload=None):
         self.rep = rep
         self.arch = arch
         self.objective = (objective if objective is not None
                           else Objective.from_arch(arch))
         self._weights_vec = weights_vec(self.objective)
+        # Traffic workload (repro.netsim.workload.Workload) backing a
+        # `trace-lat` objective term.  Its packed vector rides along with
+        # every scoring request as the runtime `_demand` operand, so
+        # workloads never retrace and stacked cross-workload scoring
+        # carries per-row demand.
+        self.workload = workload
+        needs_demand = any(t.name == "trace-lat"
+                           for t in self.objective.terms)
+        if needs_demand and workload is None:
+            raise ValueError(
+                "objective has a 'trace-lat' term but no workload; pass "
+                "Evaluator(..., workload=netsim.Workload(...))")
+        self._demand_vec = None
+        if needs_demand:
+            if workload.n != rep.layout.N:
+                raise ValueError(
+                    f"workload covers {workload.n} chiplets but the arch "
+                    f"has {rep.layout.N}")
+            self._demand_vec = np.asarray(workload.vec(), np.float32)
         self.schedule = (compile_schedule(schedule, self.objective)
                          if schedule is not None else None)
         if scorer is not None:
@@ -227,6 +246,24 @@ class Evaluator:
     def norm_vec(self) -> np.ndarray:
         """Normalizers as the scorer's runtime [NORM_DIM] vector."""
         return self._norm_vec
+
+    @property
+    def demand_vec(self) -> np.ndarray | None:
+        """The workload's packed demand operand (``None`` unless the
+        objective carries a ``trace-lat`` term)."""
+        return self._demand_vec
+
+    def _with_demand(self, batch: dict) -> dict:
+        """Attach the workload's `_demand` rows to a scoring batch (no-op
+        without a trace-lat workload, or when rows — e.g. per-row stacked
+        demand — are already present)."""
+        if self._demand_vec is None or "_demand" in batch:
+            return batch
+        P = int(batch["W"].shape[0])
+        batch = dict(batch)
+        batch["_demand"] = np.broadcast_to(
+            self._demand_vec, (P, self._demand_vec.shape[0]))
+        return batch
 
     @property
     def weights_vec(self) -> np.ndarray:
@@ -277,6 +314,7 @@ class Evaluator:
         :func:`repro.sharding.population.shard_scorer` — while keeping
         the evaluator's dispatch accounting."""
         self.n_score_calls += 1
+        batch = self._with_demand(batch)
         out = (fn or self.scorer)(
             batch,
             self._norm_vec if norms is None else norms,
@@ -316,6 +354,7 @@ class Evaluator:
         if self._ranker is None:
             self._ranker = make_ranker(self.scorer)
         batch, gconn, _, wrow = _request_parts(graphs_or_batch)
+        batch = self._with_demand(batch)
         ovf = batch.pop("overflow", None)
         valid = None if gconn is None else np.asarray(gconn)
         if ovf is not None and np.asarray(ovf).any():
@@ -1212,6 +1251,20 @@ def score_stacked(entries: list, *, score_fn=None
                 f"0 has {keys}, entry {j} has {sorted(p[0])}")
     cat = {k: jnp.concatenate([jnp.asarray(p[0][k]) for p, _ in entries])
            for k in keys}
+    # Per-row workload demand: entries whose evaluator carries a trace-lat
+    # workload contribute their own demand rows, so requests over
+    # *different* workloads stack into one dispatch of the same compiled
+    # scorer.  Mixing demand-bearing and demand-free entries would feed
+    # one term structure two different batch layouts — fail loudly.
+    dvecs = [ev.demand_vec for _, ev in entries]
+    if any(d is not None for d in dvecs):
+        if any(d is None for d in dvecs):
+            raise ValueError(
+                "stacked scoring requests disagree on workloads: some "
+                "evaluators carry a 'trace-lat' workload and some do not")
+        cat["_demand"] = np.concatenate(
+            [np.broadcast_to(d, (sz, d.shape[0]))
+             for d, sz in zip(dvecs, sizes)])
     norms = np.concatenate(
         [np.broadcast_to(ev.norm_vec, (sz, NORM_DIM))
          for (p, ev), sz in zip(entries, sizes)])

@@ -433,7 +433,8 @@ class IncrementalFront:
                 rng=np.random.default_rng(self.base_cfg.seed),
                 norm_samples=self.base_cfg.norm_samples,
                 chunk=self.base_cfg.chunk, backend=self.base_cfg.backend,
-                objective=self.base_cfg.objective, norm=norm)
+                objective=self.base_cfg.objective, norm=norm,
+                workload=self.base_cfg.workload)
         graphs = [self._rep.score_graph(c.sol) for c in cands]
         batch = stack_graphs(graphs)
         metrics = self._ev.score_batch(batch)    # one stacked device call

@@ -123,8 +123,14 @@ def _type_pairs(layout: Layout) -> dict:
     return out
 
 
-def _metrics_one(W, edges, edge_mask, area, *, pairs, conn, fw_impl):
-    """All nine cost components for a single placement (jit/vmap-able)."""
+def _metrics_one(W, edges, edge_mask, area, *, pairs, conn, fw_impl,
+                 dem_vec=None, trace_fn=None):
+    """All nine cost components for a single placement (jit/vmap-able).
+
+    With a packed demand operand ``dem_vec`` and a ``trace_fn`` (the netsim
+    rate model bound to this layout), the output additionally carries the
+    per-class ``trace_lat_{t}`` traffic metrics — computed from the same
+    FW solve, so the traffic term costs no extra shortest-path pass."""
     D, Ncnt = fw_impl(W)
     eu, ev = edges[:, 0], edges[:, 1]
     w_e = W[eu, ev]
@@ -168,6 +174,8 @@ def _metrics_one(W, edges, edge_mask, area, *, pairs, conn, fw_impl):
         thr = jnp.where(max_load > 0, jnp.minimum(1.0, 1.0 / max_load), 1.0)
         out[f"lat_{t}"] = lat
         out[f"thr_{t}"] = thr
+    if dem_vec is not None and trace_fn is not None:
+        out.update(trace_fn(D, Ncnt, W, edges, edge_mask, dem_vec))
     return out
 
 
@@ -194,12 +202,29 @@ def make_scorer(layout: Layout, *, fw_impl=fw_counts_ref, chunk: int = 16,
     objective's own :func:`~repro.core.objective.weights_vec`), so Pareto
     weight grids and constraint-hardening schedules share one compiled
     scorer — only the term structure is trace-time.
+
+    When the objective carries a ``trace-lat`` term, the batch must also
+    carry a ``_demand`` key (``[P, demand_dim(N)]`` packed workload
+    rows, see :mod:`repro.netsim.workload`); the traffic rate model then
+    runs fused on the same FW solve and the output gains per-class
+    ``trace_lat_{t}`` metrics.  Demand is a runtime operand like norms
+    and weights: different workloads/mixes never retrace.
     """
     pairs = _type_pairs(layout)
     conn = (layout.Vp + np.arange(layout.N, dtype=np.int32),
             layout.Vp + layout.N + np.arange(layout.N, dtype=np.int32))
+    needs_demand = objective is not None and any(
+        t.name == "trace-lat" for t in objective.terms)
+    trace_fn = None
+    if needs_demand:
+        # Lazy import: repro.netsim.model imports this module for the FW
+        # reference and INF_CUT; binding at build time keeps the traffic
+        # model out of the import graph of proxy-only scorers.
+        from repro.netsim.model import trace_metrics_one
+        trace_fn = functools.partial(trace_metrics_one,
+                                     srcs=conn[0], dsts=conn[1])
     one = functools.partial(_metrics_one, pairs=pairs, conn=conn,
-                            fw_impl=fw_impl)
+                            fw_impl=fw_impl, trace_fn=trace_fn)
     pair_elems = max(len(s) * len(d) for s, d, _ in pairs.values())
     cobj = compile_objective(objective, layout) \
         if objective is not None else None
@@ -222,6 +247,15 @@ def make_scorer(layout: Layout, *, fw_impl=fw_counts_ref, chunk: int = 16,
         V = batch["W"].shape[-1]
         E = batch["edges"].shape[1]
         per = max(V * V, pair_elems * E)
+        if needs_demand:
+            if "_demand" not in batch:
+                raise ValueError(
+                    "objective has a 'trace-lat' term but the batch "
+                    "carries no '_demand' workload operand; score through "
+                    "an Evaluator built with a workload "
+                    "(see repro.netsim.workload.Workload)")
+            # The rate model's [N, E, N] ECMP tensor joins the budget.
+            per = max(per, layout.N * layout.N * E)
         eff = max(1, min(chunk, _CHUNK_ELEM_BUDGET // per))
         if cobj is not None:
             if norms is None:
@@ -237,11 +271,12 @@ def make_scorer(layout: Layout, *, fw_impl=fw_counts_ref, chunk: int = 16,
                   if pad else v for k, v in batch.items()}
 
         def score_chunk(c):
-            extras = {k: c[k] for k in ("edge_len", "_norms", "_weights")
+            extras = {k: c[k]
+                      for k in ("edge_len", "_norms", "_weights", "_demand")
                       if k in c}
 
             def one_full(w, e, m, a, ex):
-                out = one(w, e, m, a)
+                out = one(w, e, m, a, dem_vec=ex.get("_demand"))
                 if cobj is not None:
                     sample = dict(out, edges=e, edge_mask=m, area=a, Vp=Vp)
                     if "edge_len" in ex:

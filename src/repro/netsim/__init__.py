@@ -1,0 +1,22 @@
+"""Layered traffic-evaluation package.
+
+* :mod:`repro.netsim.workload` — traces / synthetic traffic compiled
+  into fixed-shape demand tensors (runtime operands of the scorer).
+* :mod:`repro.netsim.model` — batched jitted ECMP + queueing rate model
+  over stacked ScoreGraphs; feeds the ``trace-lat`` objective term.
+* :mod:`repro.netsim.sim` — the event-driven wormhole-lite simulator
+  (host-side calibration oracle; re-exported at ``repro.core.netsim``
+  for compatibility).
+"""
+from .model import (Q_CAP, TRACE_METRIC_KEYS, make_trace_model,
+                    trace_metrics_one, unpack_demand)
+from .sim import (ROUTER_PIPELINE, ChipletNet, NetSim, Packet, SimResult,
+                  latency_throughput_curve, synthetic_packets)
+from .workload import Workload, demand_dim
+
+__all__ = [
+    "Q_CAP", "TRACE_METRIC_KEYS", "make_trace_model", "trace_metrics_one",
+    "unpack_demand", "ROUTER_PIPELINE", "ChipletNet", "NetSim", "Packet",
+    "SimResult", "latency_throughput_curve", "synthetic_packets",
+    "Workload", "demand_dim",
+]

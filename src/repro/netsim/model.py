@@ -1,0 +1,147 @@
+"""Device-resident traffic rate model over stacked ScoreGraphs.
+
+This is the searchable counterpart of the event-driven oracle in
+``repro.netsim.sim``: a batched, jitted queueing approximation whose
+per-placement output (``trace_lat_{t}`` per traffic class) the
+``trace-lat`` objective term turns into a cost summand, so placements
+are optimized *directly against traffic* instead of the uniform-pair
+proxies.
+
+Per placement, given the Floyd-Warshall distances ``D`` and shortest-path
+counts ``Ncnt`` the proxy scorer already computes:
+
+1. distribute each chiplet pair's packet rate over all equal-cost
+   shortest paths with ECMP/Brandes fractions (the same
+   on-shortest-path test as the throughput proxy),
+2. accumulate per-link *flit* loads ``rho`` [flits/cycle],
+3. charge a saturating M/M/1-style queueing delay
+   ``q = min(rho / (1 - rho), Q_CAP)`` per traversed link (clipped, so
+   past-saturation placements rank by how overloaded they are instead of
+   producing inf/nan),
+4. per-pair latency = path latency ``D[s, d]`` + router pipeline per hop
+   + queueing along the path + serialization (``flits - 1``), reduced to
+   a demand-weighted mean per traffic class.
+
+Demand enters as a packed runtime vector (``workload.Workload.vec()``),
+never as a trace-time constant — swapping workloads re-dispatches the
+same compiled scorer.  Calibration against the event-driven simulator is
+on *relative orderings* across placements (rank correlation, see
+``tests/test_netsim.py``), not absolute cycle counts.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.chiplets import TRAFFIC_TYPES
+from repro.core.proxies import INF_CUT, Layout, fw_counts_ref
+
+from .sim import ROUTER_PIPELINE
+from .workload import K, demand_dim
+
+# Queueing-delay divergence cap [cycles]: rho/(1-rho) saturates here, so
+# an overloaded link costs a large-but-finite, still-monotone penalty.
+Q_CAP = 1.0e4
+
+TRACE_METRIC_KEYS = tuple(f"trace_lat_{t}" for t in TRAFFIC_TYPES) + (
+    "trace_max_load",)
+
+
+def unpack_demand(dem_vec, n: int):
+    """Split a packed ``[demand_dim(n)]`` vector into
+    (``rate [K, n, n]``, ``flits [K]``)."""
+    rate = jnp.reshape(dem_vec[:K * n * n], (K, n, n))
+    flits = dem_vec[K * n * n:]
+    return rate, flits
+
+
+def trace_metrics_one(D, Ncnt, W, edges, edge_mask, dem_vec, *, srcs, dsts,
+                      router_pipeline: float = ROUTER_PIPELINE):
+    """Traffic metrics for one placement (jit/vmap-able).
+
+    ``srcs``/``dsts`` are the static virtual source/sink node indices of
+    the arch's chiplets (``layout.Vp + i`` / ``layout.Vp + N + i``), so
+    chiplet-level demand maps onto the PHY-level FW matrices.  Returns
+    ``trace_lat_{t}`` per traffic class (0 where the class has no
+    demand) plus ``trace_max_load`` (bottleneck link flit load).
+    """
+    srcs = jnp.asarray(srcs)
+    dsts = jnp.asarray(dsts)
+    n = srcs.shape[0]
+    rate, flits = unpack_demand(dem_vec, n)
+    eu, ev = edges[:, 0], edges[:, 1]
+    w_e = W[eu, ev]
+    Dsd = D[srcs][:, dsts]                                   # [n, n]
+    Dsu = D[srcs][:, eu]                                     # [n, E]
+    Dvd = D[ev][:, dsts]                                     # [E, n]
+    Nsu = Ncnt[srcs][:, eu]
+    Nvd = Ncnt[ev][:, dsts]
+    Nsd = jnp.maximum(Ncnt[srcs][:, dsts], 1.0)
+    # ECMP: edge (u, v) lies on a shortest s->d path iff
+    # D[s,u] + w(u,v) + D[v,d] == D[s,d]; the Brandes fraction
+    # N[s,u]*N[v,d]/N[s,d] is the share of s->d traffic crossing it.
+    # Padded edge rows ((0, 0), weight 0) would pass the on-path test
+    # spuriously, so the mask applies *inside* the selection.
+    on_sp = (
+        jnp.abs(Dsu[:, :, None] + w_e[None, :, None] + Dvd[None, :, :]
+                - Dsd[:, None, :]) < 0.5
+    ) & (Dsd[:, None, :] < INF_CUT) & edge_mask[None, :, None]
+    use = jnp.where(
+        on_sp, Nsu[:, :, None] * Nvd[None, :, :] / Nsd[:, None, :],
+        0.0)                                                 # [n, E, n]
+    # Per-link flit load, summed over classes, and its queueing delay.
+    # rho/(1-rho) counts waits in units of the link's mean *service* time
+    # (wormhole holds a link `flits` cycles per packet), so it is scaled
+    # by the link's flits-per-packet to land in cycles.
+    fload = (rate * flits[:, None, None]).sum(axis=0)        # [n, n] flits
+    pload = rate.sum(axis=0)                                 # [n, n] packets
+    rho = jnp.einsum("st,set->e", fload, use)
+    pkt = jnp.einsum("st,set->e", pload, use)
+    serv = rho / jnp.maximum(pkt, 1e-12)                     # cycles/packet
+    q = jnp.minimum(
+        serv * rho / jnp.maximum(1.0 - rho, 1.0 / Q_CAP), Q_CAP)
+    queue = jnp.einsum("set,e->st", use, q)                  # [n, n]
+    hops = use.sum(axis=1)                                   # expected D2D hops
+    reach = Dsd < INF_CUT
+    base = jnp.where(reach, Dsd + router_pipeline * hops + queue, 0.0)
+    out = {"trace_max_load": jnp.where(edge_mask, rho, 0.0).max()}
+    for k, t in enumerate(TRAFFIC_TYPES):
+        r = jnp.where(reach, rate[k], 0.0)
+        tot = r.sum()
+        lat = (r * base).sum() / jnp.maximum(tot, 1e-12) + (flits[k] - 1.0)
+        out[f"trace_lat_{t}"] = jnp.where(tot > 0, lat, 0.0)
+    return out
+
+
+def make_trace_model(layout: Layout, *, fw_impl=fw_counts_ref,
+                     router_pipeline: float = ROUTER_PIPELINE):
+    """Standalone jitted batched rate model: ``model(batch, demand)`` maps
+    a stacked ScoreGraph batch (``W [P,V,V]``, ``edges``, ``edge_mask``)
+    plus a packed demand operand (``[DEM]`` shared, or ``[P, DEM]``
+    per-row) to a dict of ``[P]`` arrays (``TRACE_METRIC_KEYS``).
+
+    Inside the search pipeline the same computation runs fused into
+    ``make_scorer``; this entry point serves calibration tests and
+    benchmarks that want traffic metrics without an objective.
+    """
+    srcs = layout.Vp + np.arange(layout.N, dtype=np.int32)
+    dsts = layout.Vp + layout.N + np.arange(layout.N, dtype=np.int32)
+    dim = demand_dim(layout.N)
+
+    @jax.jit
+    def model(batch, demand):
+        P = batch["W"].shape[0]
+        dem = jnp.broadcast_to(
+            jnp.asarray(demand, jnp.float32), (P, dim))
+
+        def one(w, e, m, d):
+            D, Ncnt = fw_impl(w)
+            return trace_metrics_one(D, Ncnt, w, e, m, d, srcs=srcs,
+                                     dsts=dsts,
+                                     router_pipeline=router_pipeline)
+
+        return jax.vmap(one)(batch["W"], batch["edges"],
+                             batch["edge_mask"], dem)
+
+    return model

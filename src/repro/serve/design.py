@@ -206,7 +206,8 @@ class DesignEngine:
         arch = resolve_arch(cfg.arch, cfg.config)
         nkey = (cfg.arch, cfg.config, cfg.seed, cfg.norm_samples, cfg.chunk,
                 cfg.backend, cfg.mutation_mode, cfg.objective.normalizer)
-        key = nkey + (cfg.objective, cfg.schedule, cfg.archive_k, salt)
+        key = nkey + (cfg.objective, cfg.schedule, cfg.archive_k,
+                      cfg.workload, salt)
         if key not in self._evs:
             rep = make_rep(arch, cfg.arch, cfg.mutation_mode)
             ev = make_evaluator(
@@ -214,7 +215,7 @@ class DesignEngine:
                 norm_samples=cfg.norm_samples, chunk=cfg.chunk,
                 backend=cfg.backend, objective=cfg.objective,
                 schedule=cfg.schedule, norm=self._norms.get(nkey),
-                archive_k=cfg.archive_k)
+                archive_k=cfg.archive_k, workload=cfg.workload)
             self._evs[key] = ev
             self._norms.setdefault(nkey, ev.norm)
             self.stats.evaluators_built += 1

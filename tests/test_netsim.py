@@ -1,7 +1,6 @@
-"""Regression tests for the cycle-level ICI simulator (``netsim``).
+"""Regression + calibration tests for the layered netsim package.
 
-``netsim`` was only exercised indirectly (through the trace benchmarks);
-these pin its two public workloads directly:
+Host oracle (``repro.netsim.sim``, still importable as ``core.netsim``):
 
 * ``synthetic_packets`` — per-traffic-class rate accounting: sources and
   destinations drawn from the right chiplet kinds, no self-pairs,
@@ -10,15 +9,30 @@ these pin its two public workloads directly:
 * ``latency_throughput_curve`` — zero-load latency matching the routed
   hop latency, saturation monotonicity (average latency does not
   collapse as the injection rate grows, and diverges well past the
-  bottleneck-link saturation point).
+  bottleneck-link saturation point), per-rate independent seeding.
+* ``NetSim.run`` never mutates its input packets; per-packet times are
+  reported out of band in ``SimResult.times``.
+
+Device rate model (``repro.netsim.model``):
+
+* zero-load ``trace_lat`` equals the host's routed-hop formula,
+* latency saturates monotonically with the injection rate,
+* rank correlation against the host oracle across random placements is
+  >= 0.9 per traffic class on all four paper archs (calibration).
 """
+import dataclasses
+from collections import Counter
+
 import numpy as np
 import pytest
 
+from repro.core.api import make_rep
 from repro.core.baseline import MeshBaseline
 from repro.core.chiplets import COMPUTE, IO, MEMORY, paper_arch
-from repro.core.netsim import (ROUTER_PIPELINE, ChipletNet, NetSim,
+from repro.core.netsim import (ROUTER_PIPELINE, ChipletNet, NetSim, Packet,
                                latency_throughput_curve, synthetic_packets)
+from repro.core.topology import infer_links_mst, stack_graphs
+from repro.netsim import Workload, demand_dim, make_trace_model
 
 KIND_OF = {"c": COMPUTE, "m": MEMORY, "i": IO}
 
@@ -87,7 +101,6 @@ def test_zero_load_latency_matches_routed_hops(net):
     srcs = np.nonzero(cn.kinds == COMPUTE)[0]
     dsts = np.nonzero(cn.kinds == MEMORY)[0]
     s, d = int(srcs[0]), int(dsts[-1])
-    from repro.core.netsim import Packet
     res = sim.run([Packet(0, s, d, 9, 0)])
     path = cn.path(s, d)
     hops = len(path) - 1
@@ -125,3 +138,216 @@ def test_curve_per_class_rates_are_independent(net):
                                              n_cycles=1200, seed=2)
     assert np.isfinite(lat_c2m) and np.isfinite(lat_m2i)
     assert lat_c2m > lat_m2i
+
+
+# ---------------------------------------------------------------------------
+# NetSim.run side-effect freedom + per-rate curve seeding.
+# ---------------------------------------------------------------------------
+
+def test_run_does_not_mutate_packets(net):
+    arch, cn = net
+    pkts = synthetic_packets(cn, "c2m", 0.05, 800, np.random.default_rng(11))
+    sim = NetSim(cn, arch)
+    before = [dataclasses.astuple(p) for p in pkts]
+    r1 = sim.run(pkts)
+    r2 = sim.run(pkts)
+    # Packets are frozen pure inputs: no sim state leaks onto them, so a
+    # second run over the same list reproduces the first exactly.
+    assert [dataclasses.astuple(p) for p in pkts] == before
+    assert not hasattr(pkts[0], "inject_t")
+    assert not hasattr(pkts[0], "finish_t")
+    assert r1.n_done == r2.n_done == len(pkts)
+    assert r1.avg_latency == r2.avg_latency
+    assert np.array_equal(r1.latencies, r2.latencies)
+    # Per-packet times live in the result, keyed by pid.
+    assert r1.times is not None and len(r1.times) == r1.n_done
+    for p in pkts:
+        inj, fin = r1.times[p.pid]
+        assert inj >= p.cycle and fin > inj
+
+
+def test_packet_is_frozen(net):
+    p = Packet(0, 1, 2, 9, 0)
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        p.flits = 3
+
+
+def test_run_empty_trace(net):
+    arch, cn = net
+    res = NetSim(cn, arch).run([])
+    assert res.n_done == 0
+    assert np.isnan(res.avg_latency)
+    assert res.times == {}
+
+
+def test_curve_per_rate_seeds_deterministic_and_distinct(net):
+    arch, cn = net
+    rates = [0.03, 0.03]
+    a = latency_throughput_curve(cn, arch, "c2m", rates, n_cycles=800, seed=5)
+    b = latency_throughput_curve(cn, arch, "c2m", rates, n_cycles=800, seed=5)
+    # Reproducible from `seed` alone...
+    assert a == b
+    # ...but each rate point draws from its own (seed, index) stream, so
+    # a repeated rate gets an independent sample, not a copy.
+    assert a[0][1] != a[1][1]
+
+
+# ---------------------------------------------------------------------------
+# Device rate model: zero-load identity + saturation on the mesh baseline.
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def device(net):
+    arch, cn = net
+    rep = make_rep(arch, "homog32", None)
+    graph, _, _ = MeshBaseline(arch).build()
+    batch = stack_graphs([graph])
+    model = make_trace_model(rep.layout)
+    return arch, cn, batch, model
+
+
+def test_device_zero_load_matches_routed_hops(device):
+    arch, cn, batch, model = device
+    srcs = np.nonzero(cn.kinds == COMPUTE)[0]
+    dsts = np.nonzero(cn.kinds == MEMORY)[0]
+    s, d = int(srcs[0]), int(dsts[-1])
+    # One packet in a million cycles: queueing is negligible, so the
+    # device trace_lat must equal the host's routed-hop formula.
+    wl = Workload.from_trace([Packet(0, s, d, 9, 0)], cn.kinds, 10 ** 6)
+    assert wl.vec().shape == (demand_dim(cn.n),)
+    out = model(batch, wl.vec())
+    hops = len(cn.path(s, d)) - 1
+    want = hops * (arch.latency.d2d_cost() + ROUTER_PIPELINE) \
+        + (hops - 1) * arch.latency.l_relay + 9 - 1
+    assert float(out["trace_lat_c2m"][0]) == pytest.approx(want, abs=0.05)
+    assert float(out["trace_lat_c2c"][0]) == 0.0    # no demand in class
+
+
+def test_device_latency_saturates_monotonically(device):
+    _, cn, batch, model = device
+    lats, loads = [], []
+    for r in [1e-4, 1e-3, 1e-2, 0.1, 0.4]:
+        wl = Workload.synthetic(cn.kinds, "c2m", r)
+        out = model(batch, wl.vec())
+        lats.append(float(out["trace_lat_c2m"][0]))
+        loads.append(float(out["trace_max_load"][0]))
+    lats, loads = np.array(lats), np.array(loads)
+    assert (np.diff(lats) > 0).all()
+    assert (np.diff(loads) > 0).all()
+    # far past saturation the predicted latency must clearly diverge
+    assert lats[-1] > 2.0 * lats[0]
+
+
+def test_workload_serde_digest_and_scaling(net):
+    _, cn = net
+    wl = Workload.synthetic(cn.kinds, "c2m", 0.01)
+    back = Workload.from_dict(wl.to_dict())
+    assert back == wl and hash(back) == hash(wl)
+    assert back.digest() == wl.digest()
+    assert wl.scaled(2.0).rate.sum() == pytest.approx(2 * wl.rate.sum())
+    assert wl.scaled(2.0) != wl
+    with pytest.raises(ValueError):
+        Workload.from_dict({**wl.to_dict(), "bogus": 1})
+
+
+# ---------------------------------------------------------------------------
+# Calibration: device rate model vs host oracle, rank correlation across
+# random placements, per traffic class, on all four paper archs.
+# ---------------------------------------------------------------------------
+
+def _spearman(a, b):
+    ra = np.argsort(np.argsort(a)).astype(float)
+    rb = np.argsort(np.argsort(b)).astype(float)
+    ra -= ra.mean()
+    rb -= rb.mean()
+    return float((ra * rb).sum()
+                 / np.sqrt((ra * ra).sum() * (rb * rb).sum()))
+
+
+def _shared_phys(links):
+    cnt = Counter()
+    for p, q in links:
+        cnt[p] += 1
+        cnt[q] += 1
+    return {p for p, c in cnt.items() if c > 1}
+
+
+def _calibration_placements(arch_name, strictness, n_pl, seed=5):
+    """Random connected placements plus their host nets and score graphs.
+
+    ``strictness`` filters hetero placements where §VI-A link inference
+    double-books a PHY: the PHY-level score graph then admits pass-through
+    routing at the shared PHY (free of the relay surcharge, and on
+    non-relay chiplets not physically possible at all), which the
+    chiplet-level oracle correctly rejects — a known laxity of the proxy
+    graph (see ``core.topology``), not of the rate model under test.
+    ``"any"`` rejects every double-booked PHY; ``"nonrelay"`` only
+    double-booked PHYs on non-relay chiplets (dense 64-chiplet corner
+    placements almost always share some relay PHY, and the missed
+    10-cycle relay surcharge is immaterial at that scale).
+    """
+    arch = paper_arch(arch_name, "baseline")
+    rep = make_rep(arch, arch_name, None)
+    rng = np.random.default_rng(seed)
+    graphs, nets = [], []
+    while len(nets) < n_pl:
+        sol = rep.random(rng)
+        g = rep.score_graph(sol)
+        if not g.connected:
+            continue
+        geo = rep.geometry(sol)
+        if hasattr(rep, "links_of"):
+            links, _ = rep.links_of(sol)
+        else:
+            links, _ = infer_links_mst(arch, geo)
+            shared = _shared_phys(links)
+            if strictness == "any" and shared:
+                continue
+            if strictness == "nonrelay" and any(
+                    not geo.relay[geo.owner[p]] for p in shared):
+                continue
+        graphs.append(g)
+        nets.append(ChipletNet.from_links(arch, geo, links))
+    return arch, rep, stack_graphs(graphs), nets
+
+
+@pytest.mark.parametrize("arch_name,strictness", [
+    ("homog32", None),
+    ("hetero32", "any"),
+    ("homog64", None),
+    pytest.param("hetero64", "nonrelay", marks=pytest.mark.slow),
+])
+def test_device_model_ranks_like_host_oracle(arch_name, strictness):
+    """Per traffic class, the device rate model orders random placements
+    like the event-driven host simulator (Spearman rho >= 0.9).
+
+    Calibration is at low load with the *same* trace driving both sides
+    per seed: the host runs the packet list, the device scores the
+    empirical ``Workload.from_trace`` compilation of it, and both are
+    averaged over seeds.  Pairs the host cannot route (placements that
+    strand traffic behind non-relay chiplets) are dropped from the trace
+    before both measurements.
+    """
+    rate, n_cycles, n_pl, n_seeds = 1e-4, 12000, 7, 3
+    arch, rep, batch, nets = _calibration_placements(
+        arch_name, strictness, n_pl)
+    kinds = np.asarray(arch.kinds())
+    model = make_trace_model(rep.layout)
+    rhos = {}
+    for t in ("c2c", "c2m", "c2i", "m2i"):
+        dev, host = [], []
+        for i, cn in enumerate(nets):
+            one = {k: v[i:i + 1] for k, v in batch.items()}
+            hs, ds = [], []
+            for sd in range(n_seeds):
+                pk = synthetic_packets(cn, t, rate, n_cycles,
+                                       np.random.default_rng((9, i, sd)))
+                pk = [p for p in pk if cn.next_hop[p.src, p.dst] >= 0]
+                hs.append(NetSim(cn, arch).run(pk).avg_latency)
+                wl = Workload.from_trace(pk, kinds, n_cycles)
+                ds.append(float(np.asarray(
+                    model(one, wl.vec())[f"trace_lat_{t}"])[0]))
+            host.append(float(np.mean(hs)))
+            dev.append(float(np.mean(ds)))
+        rhos[t] = _spearman(np.array(dev), np.array(host))
+    assert all(r >= 0.9 for r in rhos.values()), rhos

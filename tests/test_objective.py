@@ -22,11 +22,13 @@ from repro.core.topology import stack_graphs
 from repro.core.traces import TraceMix
 
 
-def _evaluator(arch_name, config="baseline", objective=None, n=8):
+def _evaluator(arch_name, config="baseline", objective=None, n=8,
+               workload=None):
     arch = paper_arch(arch_name, config)
     rep = make_rep(arch, arch_name)
     return make_evaluator(rep, arch, rng=np.random.default_rng(0),
-                          norm_samples=n, chunk=4, objective=objective), rep
+                          norm_samples=n, chunk=4, objective=objective,
+                          workload=workload), rep
 
 
 def _scored(ev, n=6, seed=1):
@@ -349,6 +351,85 @@ def test_topk_respects_hetero_connectivity_override():
     assert cheapest not in set(int(i) for i in ik if np.isfinite(ck[0]))
     valid_sorted = np.argsort(np.where(conn2, costs, np.inf))[:3]
     assert int(ik[0]) == int(valid_sorted[0])
+
+
+# ---------------------------------------------------------------------------
+# trace-lat: traffic-driven objective term (device == host, plumbing).
+# ---------------------------------------------------------------------------
+
+def _trace_workload(arch_name, traffic="c2m", rate=0.01):
+    from repro.netsim import Workload
+    arch = paper_arch(arch_name, "baseline")
+    return Workload.synthetic(arch.kinds(), traffic, rate)
+
+
+@pytest.mark.parametrize("arch_name", ["homog32", "hetero32"])
+def test_trace_lat_device_cost_agrees_with_host(arch_name):
+    obj = Objective().with_terms(TermSpec("trace-lat", weight=0.5))
+    wl = _trace_workload(arch_name)
+    ev, _ = _evaluator(arch_name, objective=obj, workload=wl)
+    metrics, batch = _scored(ev)
+    # the fused scorer emits the per-class traffic metrics...
+    for t in TRAFFIC_TYPES:
+        assert f"trace_lat_{t}" in metrics
+    assert "trace_max_load" in metrics
+    # ...and the float64 host recomputation matches the device cost
+    host = objective_cost_host(metrics, obj, ev.norm, batch=batch)
+    np.testing.assert_allclose(ev.costs_from(metrics), host,
+                               rtol=1e-4, atol=1e-5)
+    # traffic on c2m only: the term adds a strictly positive summand
+    base = objective_cost_host(metrics, Objective(), ev.norm)
+    assert (host > base).all()
+
+
+def test_trace_lat_requires_matching_workload():
+    obj = Objective().with_terms(TermSpec("trace-lat"))
+    with pytest.raises(ValueError, match="workload"):
+        _evaluator("homog32", objective=obj)
+    with pytest.raises(ValueError, match="arch has 40"):
+        _evaluator("homog32", objective=obj,
+                   workload=_trace_workload("homog64"))
+    # host recomputation without trace metrics in the sample fails fast
+    with pytest.raises(KeyError, match="trace_lat"):
+        objective_cost_host({"area": np.ones(1)},
+                            Objective(terms=("trace-lat",)),
+                            _evaluator("homog32")[0].norm)
+
+
+def test_experiment_config_carries_workload():
+    wl = _trace_workload("homog32")
+    obj = Objective().with_terms(TermSpec("trace-lat"))
+    cfg = ExperimentConfig(arch="homog32", objective=obj, workload=wl)
+    back = ExperimentConfig.from_json(cfg.to_json())
+    assert back == cfg and back.workload == wl
+    assert hash(back) == hash(cfg)
+    # configs without a workload key still load (stacked-PR compat)
+    d = cfg.to_dict()
+    del d["workload"]
+    assert ExperimentConfig.from_dict(d).workload is None
+
+
+def test_workload_swap_reuses_compiled_scorer_and_stacks():
+    """Workloads are runtime operands: sweeping traffic patterns neither
+    recompiles nor unstacks — the acceptance gate for the netsim layer."""
+    clear_scorer_cache()
+    obj = Objective().with_terms(TermSpec("trace-lat", weight=0.5))
+    base = dict(arch="homog32", algorithms=("br",), budget=Budget(evals=4),
+                norm_samples=4, chunk=4, objective=obj)
+    cfgs = [ExperimentConfig(**base, workload=_trace_workload(
+        "homog32", traffic=t)) for t in ("c2m", "c2c")]
+    res = run_sweep(cfgs)
+    assert res.stats.scorers_built == 1          # compiled once...
+    assert res.stats.stacked_groups == 1         # ...and dispatched stacked
+    # per-row demand keeps each run exact: solo reruns agree bit-for-bit
+    for cfg, run in zip(cfgs, res.runs):
+        (solo,) = run_experiment(cfg)
+        assert run.records[0].result.best_cost == solo.result.best_cost
+    # a second sweep over new traffic patterns causes zero retraces
+    more = [ExperimentConfig(**base, workload=_trace_workload(
+        "homog32", rate=r)) for r in (0.003, 0.03)]
+    res2 = run_sweep(more)
+    assert res2.stats.scorers_built == 0
 
 
 def test_drive_stacked_rejects_mismatched_request_keys():

@@ -94,10 +94,10 @@ def test_dependencies_enforced(net):
     pkts = [Packet(0, 0, 5, 1, cycle=100),
             Packet(1, 5, 0, 9, cycle=0, deps=(0,))]
     res = sim.run(pkts, mode="authentic")
-    p0 = next(p for p in pkts if p.pid == 0)
-    p1 = next(p for p in pkts if p.pid == 1)
-    assert p0.inject_t == 100
-    assert p1.inject_t >= p0.finish_t
+    inj0, fin0 = res.times[0]
+    inj1, _ = res.times[1]
+    assert inj0 == 100
+    assert inj1 >= fin0
 
 
 def test_idealized_faster_injection(net):
