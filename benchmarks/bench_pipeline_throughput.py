@@ -40,6 +40,13 @@ VMEM-resident kernel's ~3*V^2*4B working set stops fitting and
 also fills the e2e gap: every grid (8x8 and 12x12 included) now emits
 ``e2e_per_s`` numbers with per-grid batch budgets.
 
+PR 9 adds the **arch3d** section: prep throughput for the 3D /
+hierarchical families (``repro.arch3d``) — host per-child Python
+(merge + mutate + record-walk graph assembly + union-find) vs one fused
+device call through the same pluggable ``DevicePipeline._stages``, with
+the tier-value vector (TSV / backbone latency multipliers) as a runtime
+jit operand.  Target: >= 3x device over host.
+
 Results go to stdout as BENCH lines and to
 ``artifacts/bench/pipeline_throughput.json``; ``benchmarks.run`` copies
 that to ``BENCH_pipeline_throughput.json`` at the repo root so the perf
@@ -110,8 +117,12 @@ def _host_prep_rate(rep, parents, n: int) -> float:
 
 
 def _device_prep_rate(rep, parents, n: int) -> float:
-    """One fused merge_batch -> mutate_batch -> build call for n children."""
+    """One fused merge_batch -> mutate_batch -> build call for n children.
+    Reps with runtime weight tiers (``repro.arch3d``) take the tier
+    vector as a trailing stage operand."""
     _, _, _gen, _mut, _child, _ = DevicePipeline._stages(rep)
+    tiers = getattr(rep, "tier_values", None)
+    extra = () if tiers is None else (jnp.asarray(tiers),)
     rng = np.random.default_rng(1)
     idx = rng.integers(len(parents), size=(n, 2))
     ta = np.stack([parents[a][0] for a, _ in idx])
@@ -119,12 +130,13 @@ def _device_prep_rate(rep, parents, n: int) -> float:
     tb = np.stack([parents[b][0] for _, b in idx])
     rb = np.stack([parents[b][1] for _, b in idx])
     key = jax.random.PRNGKey(0)
-    jax.block_until_ready(_child(key, ta, ra, tb, rb, 0.5))   # warm the jit
+    jax.block_until_ready(                                    # warm the jit
+        _child(key, ta, ra, tb, rb, 0.5, *extra))
     best = np.inf
     for i in range(1, 4):        # best-of-3: single calls are noisy
         t0 = time.perf_counter()
         jax.block_until_ready(
-            _child(jax.random.PRNGKey(i), ta, ra, tb, rb, 0.5))
+            _child(jax.random.PRNGKey(i), ta, ra, tb, rb, 0.5, *extra))
         best = min(best, time.perf_counter() - t0)
     return n / best
 
@@ -386,6 +398,31 @@ def run(quick: bool = True) -> dict:
          "fused batched ops + vectorized corner place + Boruvka on device")
     emit("pipeline_hetero32_prep_speedup", round(hd / hh, 1),
          f"{hd / hh:.1f}x batched over host loop (target >= 3x)")
+    # 3D / hierarchical families (PR 9): stacked grids + gateway
+    # backbones through the same pluggable stages.  gw3d64 uses the
+    # relay-capable "placeit" config (see arch3d.families).
+    from repro.arch3d import make_rep3d
+    from repro.core.chiplets import resolve_arch
+    a3n = budget(quick, 32, 128)
+    arch3d = {}
+    for arch_name, config in (("stack3d32", "baseline"),
+                              ("gw3d64", "placeit")):
+        arch = resolve_arch(arch_name, config)
+        rep3 = make_rep3d(arch, arch_name)
+        rng = np.random.default_rng(0)
+        parents = [rep3.random(rng) for _ in range(16)]
+        h3 = _host_prep_rate(rep3, parents, a3n)
+        d3 = _device_prep_rate(rep3, parents, a3n)
+        arch3d[arch_name] = dict(host_prep_per_s=h3, device_prep_per_s=d3,
+                                 prep_speedup=d3 / h3, n_prep=a3n,
+                                 config=config)
+        emit(f"pipeline_{arch_name}_host_prep_per_s", round(h3, 1),
+             "per-child python merge+mutate+record-walk graph+union-find")
+        emit(f"pipeline_{arch_name}_device_prep_per_s", round(d3, 1),
+             "fused device call; tier values are a runtime jit operand")
+        emit(f"pipeline_{arch_name}_prep_speedup", round(d3 / h3, 1),
+             f"{d3 / h3:.1f}x device over host loop (target >= 3x)")
+    results["arch3d"] = arch3d
     # objective ranking (PR 4): cost evaluation + best-placement selection
     # over a scored candidate batch — host numpy formula + argsort vs the
     # in-scorer compiled objective + device top-k

@@ -1,0 +1,77 @@
+"""3D / hierarchical family sweep: stacked grids vs the flat mesh.
+
+The same 32-chiplet set (24 compute, 4 memory, 4 IO) is arranged three
+ways — the paper's flat 2D grid and two ``repro.arch3d`` families (a
+2-layer TSV-stacked grid and its torus augmentation) — and each is
+optimized with the batched GA under the same objective (base terms plus
+trace latency on a synthetic C2M workload).  Vertical links pay a
+``tsv_slowdown`` multiplier on the link latency; because the tier vector
+is a runtime jit operand, the slowdown sweep at the end reuses every
+compiled stage (watch ``scorers_built``).
+
+  PYTHONPATH=src python examples/topo3d_sweep.py [--evals 96]
+"""
+import argparse
+import dataclasses
+
+import numpy as np
+
+from repro.arch3d import default_tier_values, make_rep3d
+from repro.core.api import (Budget, ExperimentConfig, make_evaluator,
+                            run_sweep)
+from repro.core.chiplets import resolve_arch
+from repro.core.objective import Objective, TermSpec
+from repro.netsim import Workload
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--evals", type=int, default=96)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    obj = Objective().with_terms(TermSpec("trace-lat", weight=0.5))
+
+    def cfg(arch_name):
+        arch = resolve_arch(arch_name, "baseline")
+        return ExperimentConfig(
+            arch=arch_name, algorithms=("ga-batched",),
+            budget=Budget(evals=args.evals), seed=args.seed,
+            norm_samples=8, chunk=16, objective=obj,
+            workload=Workload.synthetic(arch.kinds(), "c2m", 0.01))
+
+    names = ["homog32", "stack3d32", "torus3d32"]
+    res = run_sweep([cfg(n) for n in names])
+    print(f"{'family':12s} {'grid':10s} {'best cost':>10s}")
+    for name, run in zip(names, res.runs):
+        rec = run.records[0]
+        shape = "x".join(str(d) for d in np.asarray(
+            rec.result.best_sol[0]).shape)
+        print(f"{name:12s} {shape:10s} {rec.result.best_cost:10.3f}")
+    print(f"(scorers built: {res.stats.scorers_built} — one per distinct "
+          "graph layout)\n")
+
+    # TSV-slowdown sweep on the stacked family: the tier vector is a
+    # runtime operand, so no stage recompiles between sweep points.
+    arch = resolve_arch("stack3d32", "baseline")
+    base = make_rep3d(arch, "stack3d32")
+    wl = Workload.synthetic(arch.kinds(), "c2m", 0.01)
+    print("tsv_slowdown sweep (stack3d32, shared compiled stages):")
+    print("  tiers default = "
+          f"{[float(v) for v in default_tier_values(arch)]}")
+    from repro.core.registries import OPTIMIZERS
+    entry = OPTIMIZERS.get("ga-batched")
+    for tsv in (1.0, 4.0, 16.0):
+        rep = dataclasses.replace(base, tsv_slowdown=tsv)
+        ev = make_evaluator(rep, arch, rng=np.random.default_rng(0),
+                            norm_samples=8, chunk=16, objective=obj,
+                            workload=wl)
+        res = entry.fn(ev, np.random.default_rng(args.seed),
+                       Budget(evals=args.evals), entry.params_cls())
+        print(f"  tsv={tsv:5.1f}  tiers="
+              f"{[float(v) for v in rep.tier_values]}  "
+              f"best cost={res.best_cost:.3f}")
+
+
+if __name__ == "__main__":
+    main()

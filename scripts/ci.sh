@@ -1,9 +1,9 @@
 #!/usr/bin/env sh
 # Tier-1 CI: fast test pass (slow-marked tests excluded) + quick bench
 # smokes for the pipeline-throughput (incl. the large-V blocked-tile FW
-# kernel section, which quick mode limits to homog100), pareto-frontier,
-# design-service and device-netsim benches (set CI_SKIP_BENCH=1 to skip
-# them).
+# kernel section, which quick mode limits to homog100, and the arch3d
+# 3D/hierarchical-family prep section), pareto-frontier, design-service
+# and device-netsim benches (set CI_SKIP_BENCH=1 to skip them).
 #   scripts/ci.sh [extra pytest args...]
 #
 # Coverage: when pytest-cov is installed, the test pass also reports

@@ -1,0 +1,461 @@
+"""3D homogeneous placement representation (stacked grids).
+
+A placement is an R x C x Z grid of cells; each cell holds a compute-,
+memory- or IO-chiplet or is empty.  The solution object is a pair of int8
+numpy arrays ``(types, rot)`` of shape [R, C, Z] — the 2D representation
+(``core.placement_homog.HomogRep``) with one more axis.  Rotation stays
+*in-plane*: a 1-PHY chiplet's PHY faces N/E/S/W within its layer
+(vertical TSV attachment ignores rotation, see ``arch3d.topology``).
+
+``Homog3DRep`` hosts the four representation functions (random / mutate /
+merge / score) with python-loop semantics mirroring ``HomogRep``;
+``Homog3DBatch`` is the device-resident batched mirror (distribution-
+equivalent, not bit-for-bit — different RNG streams), and the
+``device_stage_key`` / ``graph_batch`` / ``tier_values`` trio plugs the
+rep into ``optimize.DevicePipeline`` without the core ever importing this
+package.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.chiplets import COMPUTE, IO, MEMORY, ArchSpec
+from repro.core.proxies import Layout
+from repro.core.topology import (DIR_DELTA as _DIR_DELTA,
+                                 ROT_DIR as _ROT_DIR, ScoreGraph)
+
+from .topology import (Grid3DGraphBatch, default_tier_values, family_records,
+                       score_graph3d_host)
+
+Sol3D = tuple[np.ndarray, np.ndarray]   # (types [R,C,Z], rot [R,C,Z])
+
+_KINDS = (COMPUTE, MEMORY, IO)
+_SWAP_TRIES = 128    # host caps at 200 sequential tries; pre-drawn here
+# Neighbor-mutation directions: the four in-plane grid directions plus
+# up/down the stack, as (dr, dc, dz).
+_DIRS3 = tuple([(_DIR_DELTA[d][0], _DIR_DELTA[d][1], 0) for d in _ROT_DIR]
+               + [(0, 0, 1), (0, 0, -1)])
+
+
+def sol_key3d(sol: Sol3D) -> bytes:
+    return sol[0].tobytes() + sol[1].tobytes()
+
+
+@dataclass
+class Homog3DRep:
+    """Placement representation + operators for stacked homogeneous grids.
+
+    ``kind`` / ``cluster`` / ``augment`` select the arch family's static
+    adjacency structure (see ``arch3d.topology.family_records``);
+    ``tsv_slowdown`` / ``backbone_factor`` only scale the runtime tier
+    latency vector (:attr:`tier_values`) — they are *excluded* from
+    :meth:`device_stage_key`, so sweeping them shares compiled stages.
+    """
+
+    arch: ArchSpec
+    R: int
+    C: int
+    Z: int
+    mutation_mode: str = "neighbor-one"
+    kind: str = "stack"                       # stack | gateway
+    cluster: tuple[int, int] | None = None
+    augment: str = "none"                     # none | torus | express | ...
+    augment_params: dict = field(default_factory=dict)
+    tsv_slowdown: float = 4.0
+    backbone_factor: float = 2.0
+
+    def __post_init__(self):
+        n = len(self.arch.chiplets)
+        if self.R * self.C * self.Z < n:
+            raise ValueError("grid too small for chiplet count")
+        self._kind_instances = {
+            k: [i for i, ch in enumerate(self.arch.chiplets) if ch.kind == k]
+            for k in _KINDS
+        }
+        self._phy_base = np.zeros(n + 1, dtype=np.int64)
+        for i, ch in enumerate(self.arch.chiplets):
+            self._phy_base[i + 1] = self._phy_base[i] + ch.n_phys()
+        self._rotatable = {
+            k: self.arch.chiplets[self._kind_instances[k][0]].n_phys() == 1
+            for k in _KINDS if self._kind_instances[k]
+        }
+        self.records = tuple(family_records(
+            self.arch, self.R, self.C, self.Z, kind=self.kind,
+            cluster=self.cluster, augment=self.augment,
+            augment_params=self.augment_params))
+        # Per-cell rotation candidates, derived from the *family's* records
+        # (not bare grid adjacency): ``_rot_other[cell][rot]`` lists the
+        # cells a 1-PHY chiplet rotated to ``rot`` could link to.  Gateway
+        # families exclude cross-cluster sides; torus/express wraps count —
+        # without this, 1-PHY chiplets roll toward record-free sides and
+        # connected gateway placements become vanishingly rare.
+        cells = self.R * self.C * self.Z
+        rot_other: list[list[list[int]]] = [
+            [[] for _ in range(4)] for _ in range(cells)]
+        for a in self.records:
+            if a.rot1 >= 0:
+                rot_other[a.cell1][a.rot1].append(a.cell2)
+            if a.rot2 >= 0:
+                rot_other[a.cell2][a.rot2].append(a.cell1)
+        self._rot_other = rot_other
+
+    # -- static properties -------------------------------------------------
+    @property
+    def layout(self) -> Layout:
+        return Layout(Vp=int(self._phy_base[-1]), kinds=self.arch.kinds())
+
+    @property
+    def e_max(self) -> int:
+        return 2 * len(self.records)
+
+    @property
+    def area(self) -> float:
+        # The package footprint is one layer; stacking does not grow it.
+        sz = self.arch.chiplets[0].w * self.arch.chiplets[0].h
+        return float(sz * self.R * self.C)
+
+    @property
+    def tier_values(self) -> np.ndarray:
+        """Runtime ``[W_INTRA, W_BACKBONE, W_VERTICAL]`` latency vector."""
+        return default_tier_values(self.arch,
+                                   tsv_slowdown=self.tsv_slowdown,
+                                   backbone_factor=self.backbone_factor)
+
+    @property
+    def scorer_shape_key(self) -> tuple:
+        """Splits ``api.get_scorer``'s cache between same-layout families
+        with different edge-slot counts (stack3d32 vs torus3d32): stacked
+        cross-run scoring groups by scorer identity, and unlike edge
+        shapes cannot concatenate into one batch."""
+        return ("arch3d-edges", 2 * len(self.records))
+
+    # -- DevicePipeline plug-in surface -------------------------------------
+    def device_stage_key(self) -> tuple:
+        """Stage-cache key: everything that shapes the compiled stages.
+        Tier latencies (tsv/backbone factors) are runtime operands and
+        deliberately absent."""
+        return ("arch3d", self.arch, self.R, self.C, self.Z,
+                self.mutation_mode, self.kind, self.cluster, self.augment,
+                tuple(sorted(self.augment_params.items())))
+
+    def graph_batch(self) -> Grid3DGraphBatch:
+        return Grid3DGraphBatch(self.arch, self.R, self.C, self.Z,
+                                list(self.records))
+
+    def batch_ops(self) -> "Homog3DBatch":
+        if not hasattr(self, "_batch_ops"):
+            self._batch_ops = Homog3DBatch(self)
+        return self._batch_ops
+
+    # -- helpers -------------------------------------------------------------
+    def _roll_rotation(self, types, r, c, z, rng) -> int:
+        """Uniform rotation over the cell's record-backed candidates:
+        rotations whose link partner is occupied, else rotations with any
+        record, else all four (mirrors the 2D occupied -> inside -> all
+        cascade, generalized to the family's adjacency)."""
+        tflat = types.reshape(-1)
+        cands_cell = self._rot_other[(r * self.C + c) * self.Z + z]
+        occ = [rot for rot in range(4)
+               if any(tflat[o] >= 0 for o in cands_cell[rot])]
+        anyr = [rot for rot in range(4) if cands_cell[rot]]
+        return int(rng.choice(occ or anyr or [0, 1, 2, 3]))
+
+    def _fix_rotations(self, types, rot, rng) -> None:
+        for r in range(self.R):
+            for c in range(self.C):
+                for z in range(self.Z):
+                    k = types[r, c, z]
+                    if k >= 0 and self._rotatable.get(int(k), False):
+                        rot[r, c, z] = self._roll_rotation(types, r, c, z,
+                                                           rng)
+                    else:
+                        rot[r, c, z] = 0
+
+    # -- the four representation functions -----------------------------------
+    def random(self, rng: np.random.Generator) -> Sol3D:
+        cells = self.R * self.C * self.Z
+        flat = np.full(cells, -1, dtype=np.int8)
+        kinds = [k for k, ids in self._kind_instances.items() for _ in ids]
+        pos = rng.choice(np.arange(cells), size=len(kinds), replace=False)
+        flat[pos] = np.array(kinds, dtype=np.int8)
+        types = flat.reshape(self.R, self.C, self.Z)
+        rot = np.zeros_like(types)
+        self._fix_rotations(types, rot, rng)
+        return types, rot
+
+    def mutate(self, sol: Sol3D, rng: np.random.Generator) -> Sol3D:
+        types = sol[0].copy()
+        rot = sol[1].copy()
+        neighbor = self.mutation_mode.startswith("neighbor")
+        both = self.mutation_mode.endswith("both")
+        do_swap = True
+        do_rot = both or not any(self._rotatable.values())
+        if not both and any(self._rotatable.values()):
+            do_swap = bool(rng.integers(2))
+            do_rot = not do_swap
+        if do_swap:
+            self._swap(types, rot, rng, neighbor)
+        if do_rot and any(self._rotatable.values()):
+            self._rotate_one(types, rot, rng)
+        return types, rot
+
+    def _swap(self, types, rot, rng, neighbor: bool) -> None:
+        for _ in range(200):
+            r1 = int(rng.integers(self.R))
+            c1 = int(rng.integers(self.C))
+            z1 = int(rng.integers(self.Z))
+            if neighbor:
+                dr, dc, dz = _DIRS3[int(rng.integers(6))]
+                r2, c2, z2 = r1 + dr, c1 + dc, z1 + dz
+                if not (0 <= r2 < self.R and 0 <= c2 < self.C
+                        and 0 <= z2 < self.Z):
+                    continue
+            else:
+                r2 = int(rng.integers(self.R))
+                c2 = int(rng.integers(self.C))
+                z2 = int(rng.integers(self.Z))
+            a, b = (r1, c1, z1), (r2, c2, z2)
+            if types[a] == types[b]:
+                continue
+            if types[a] < 0 and types[b] < 0:
+                continue
+            types[a], types[b] = types[b], types[a]
+            rot[a], rot[b] = rot[b], rot[a]
+            for (r, c, z) in (a, b):
+                k = types[r, c, z]
+                if k >= 0 and self._rotatable.get(int(k), False):
+                    rot[r, c, z] = self._roll_rotation(types, r, c, z, rng)
+                else:
+                    rot[r, c, z] = 0
+            return
+
+    def _rotate_one(self, types, rot, rng) -> None:
+        cand = [(r, c, z) for r in range(self.R) for c in range(self.C)
+                for z in range(self.Z)
+                if types[r, c, z] >= 0
+                and self._rotatable.get(int(types[r, c, z]), False)]
+        if not cand:
+            return
+        r, c, z = cand[int(rng.integers(len(cand)))]
+        rot[r, c, z] = self._roll_rotation(types, r, c, z, rng)
+
+    def merge(self, a: Sol3D, b: Sol3D, rng: np.random.Generator) -> Sol3D:
+        ta, ra_ = a
+        tb, rb_ = b
+        types = np.full_like(ta, -2)            # -2 = unresolved
+        match = ta == tb
+        types[match] = ta[match]
+        remaining = {k: len(ids) for k, ids in self._kind_instances.items()}
+        for k in remaining:
+            remaining[k] -= int((types == k).sum())
+        unresolved = np.argwhere(types == -2)
+        fill = []
+        for k, n in remaining.items():
+            fill += [k] * n
+        fill += [-1] * (len(unresolved) - len(fill))
+        fill = np.array(fill, dtype=np.int8)
+        rng.shuffle(fill)
+        for (r, c, z), v in zip(unresolved, fill):
+            types[r, c, z] = v
+        rot = np.zeros_like(types)
+        rot_match = match & (ra_ == rb_)
+        rot[rot_match] = ra_[rot_match]
+        for r in range(self.R):
+            for c in range(self.C):
+                for z in range(self.Z):
+                    k = types[r, c, z]
+                    if k >= 0 and self._rotatable.get(int(k), False):
+                        if not rot_match[r, c, z]:
+                            rot[r, c, z] = self._roll_rotation(
+                                types, r, c, z, rng)
+                    else:
+                        rot[r, c, z] = 0
+        return types, rot
+
+    # -- scoring --------------------------------------------------------------
+    def score_graph(self, sol: Sol3D) -> ScoreGraph:
+        return score_graph3d_host(self.arch, self.records, sol[0], sol[1],
+                                  self.tier_values, self.area)
+
+    def is_connected(self, sol: Sol3D) -> bool:
+        return bool(self.score_graph(sol).connected)
+
+
+# ---------------------------------------------------------------------------
+# Device-resident batched operators (the [B, R, C, Z] mirror of HomogBatch).
+# ---------------------------------------------------------------------------
+
+
+class Homog3DBatch:
+    """Vectorized ``random/mutate/merge`` over stacked 3D grids."""
+
+    def __init__(self, rep: Homog3DRep):
+        self.rep = rep
+        self.R, self.C, self.Z = rep.R, rep.C, rep.Z
+        self.cells = rep.R * rep.C * rep.Z
+        fill = [k for k, ids in rep._kind_instances.items() for _ in ids]
+        fill += [-1] * (self.cells - len(fill))
+        self._kinds_fill = jnp.asarray(np.array(fill, dtype=np.int8))
+        self._counts = np.array(
+            [len(rep._kind_instances.get(k, ())) for k in _KINDS], np.int32)
+        rotatable = np.array([bool(rep._rotatable.get(k, False))
+                              for k in _KINDS])
+        self._rotatable_kind = jnp.asarray(rotatable)
+        self._any_rotatable = bool(rotatable.any())
+        # Record-backed rotation candidates, padded to a rectangular
+        # gather table: ``_rot_other_idx[cell, rot]`` lists link-partner
+        # cells (sentinel ``cells`` = an always-unoccupied pad slot).
+        M = max(1, max(len(s) for cell in rep._rot_other for s in cell))
+        other = np.full((self.cells, 4, M), self.cells, np.int32)
+        any_rec = np.zeros((self.cells, 4), bool)
+        for cell, per_rot in enumerate(rep._rot_other):
+            for rot_i, partners in enumerate(per_rot):
+                other[cell, rot_i, :len(partners)] = partners
+                any_rec[cell, rot_i] = bool(partners)
+        self._rot_other_idx = jnp.asarray(other)
+        self._rot_any = jnp.asarray(any_rec)
+        self._dr6 = jnp.asarray(np.array([d[0] for d in _DIRS3], np.int32))
+        self._dc6 = jnp.asarray(np.array([d[1] for d in _DIRS3], np.int32))
+        self._dz6 = jnp.asarray(np.array([d[2] for d in _DIRS3], np.int32))
+
+    # -- rotation re-roll (vectorized ``_fix_rotations``) --------------------
+    def _rotatable_cells(self, types: jnp.ndarray) -> jnp.ndarray:
+        occ = types >= 0
+        kind = jnp.clip(types, 0, 2).astype(jnp.int32)
+        return occ & self._rotatable_kind[kind]
+
+    def _roll_rot_batch(self, key, types, rot, update) -> jnp.ndarray:
+        """Gumbel-argmax uniform roll over each cell's record-backed
+        candidate rotations (same cascade as the host
+        ``_roll_rotation``: partner-occupied -> any-record -> all 4)."""
+        shape = types.shape
+        lead = shape[:-3]
+        occ = (types >= 0).reshape(lead + (self.cells,))
+        occ_pad = jnp.concatenate(
+            [occ, jnp.zeros(lead + (1,), bool)], axis=-1)
+        cand_occ = occ_pad[..., self._rot_other_idx].any(-1)
+        rot_any = jnp.broadcast_to(self._rot_any, cand_occ.shape)
+        cand = jnp.where(cand_occ.any(-1, keepdims=True), cand_occ,
+                         jnp.where(rot_any.any(-1, keepdims=True),
+                                   rot_any, True))
+        g = jax.random.gumbel(key, cand.shape)
+        new = jnp.argmax(jnp.where(cand, g, -jnp.inf), axis=-1)
+        new = new.astype(rot.dtype).reshape(shape)
+        rotatable = self._rotatable_cells(types)
+        return jnp.where(update & rotatable, new,
+                         jnp.where(update, 0, rot)).astype(jnp.int8)
+
+    # -- the representation functions, batched -------------------------------
+    def random_batch(self, key, n: int) -> tuple[jnp.ndarray, jnp.ndarray]:
+        k1, k2 = jax.random.split(key)
+        keys = jax.random.split(k1, n)
+        perm = jax.vmap(
+            lambda k: jax.random.permutation(k, self._kinds_fill))(keys)
+        types = perm.reshape(n, self.R, self.C, self.Z)
+        rot = jnp.zeros_like(types)
+        rot = self._roll_rot_batch(k2, types, rot,
+                                   jnp.ones(types.shape, bool))
+        return types, rot
+
+    def _onehot_cells(self, idx: jnp.ndarray, flag: jnp.ndarray
+                      ) -> jnp.ndarray:
+        return (jnp.arange(self.cells)[None, :] == idx[:, None]) \
+            & flag[:, None]
+
+    def mutate_batch(self, key, types, rot
+                     ) -> tuple[jnp.ndarray, jnp.ndarray]:
+        B = types.shape[0]
+        neighbor = self.rep.mutation_mode.startswith("neighbor")
+        both = self.rep.mutation_mode.endswith("both")
+        (kcoin, kr1, kc1, kz1, kd, kr2, kc2, kz2,
+         kpick, kfix) = jax.random.split(key, 10)
+        if both or not self._any_rotatable:
+            do_swap = jnp.ones(B, bool)
+        else:
+            do_swap = jax.random.bernoulli(kcoin, 0.5, (B,))
+        if not self._any_rotatable:
+            do_rot = jnp.zeros(B, bool)
+        elif both:
+            do_rot = jnp.ones(B, bool)
+        else:
+            do_rot = ~do_swap
+        # Pre-drawn swap tries; the first valid one is the host's accepted
+        # draw (identical first-success distribution).
+        T = _SWAP_TRIES
+        r1 = jax.random.randint(kr1, (B, T), 0, self.R)
+        c1 = jax.random.randint(kc1, (B, T), 0, self.C)
+        z1 = jax.random.randint(kz1, (B, T), 0, self.Z)
+        if neighbor:
+            d = jax.random.randint(kd, (B, T), 0, 6)
+            r2 = r1 + self._dr6[d]
+            c2 = c1 + self._dc6[d]
+            z2 = z1 + self._dz6[d]
+        else:
+            r2 = jax.random.randint(kr2, (B, T), 0, self.R)
+            c2 = jax.random.randint(kc2, (B, T), 0, self.C)
+            z2 = jax.random.randint(kz2, (B, T), 0, self.Z)
+        inb = ((r2 >= 0) & (r2 < self.R) & (c2 >= 0) & (c2 < self.C)
+               & (z2 >= 0) & (z2 < self.Z))
+        i1 = (r1 * self.C + c1) * self.Z + z1
+        i2 = (jnp.clip(r2, 0, self.R - 1) * self.C
+              + jnp.clip(c2, 0, self.C - 1)) * self.Z \
+            + jnp.clip(z2, 0, self.Z - 1)
+        tflat = types.reshape(B, self.cells)
+        rflat = rot.reshape(B, self.cells)
+        t1 = jnp.take_along_axis(tflat, i1, axis=1)
+        t2 = jnp.take_along_axis(tflat, i2, axis=1)
+        valid = inb & (t1 != t2) & ~((t1 < 0) & (t2 < 0))
+        first = jnp.argmax(valid, axis=1)
+        sel = lambda a: jnp.take_along_axis(a, first[:, None], axis=1)[:, 0]
+        do_it = do_swap & valid.any(axis=1)
+        s1 = jnp.where(do_it, sel(i1), 0)
+        s2 = jnp.where(do_it, sel(i2), 0)    # s1 == s2 == 0 -> no-op swap
+        b = jnp.arange(B)
+        v1t, v2t = tflat[b, s1], tflat[b, s2]
+        tflat = tflat.at[b, s1].set(v2t).at[b, s2].set(v1t)
+        v1r, v2r = rflat[b, s1], rflat[b, s2]
+        rflat = rflat.at[b, s1].set(v2r).at[b, s2].set(v1r)
+        update = self._onehot_cells(s1, do_it) | self._onehot_cells(s2, do_it)
+        if self._any_rotatable:
+            rc = self._rotatable_cells(tflat)
+            g = jax.random.gumbel(kpick, (B, self.cells))
+            pick = jnp.argmax(jnp.where(rc, g, -jnp.inf), axis=1)
+            update |= self._onehot_cells(pick, do_rot & rc.any(axis=1))
+        shape = (B, self.R, self.C, self.Z)
+        types2 = tflat.reshape(shape)
+        rot2 = rflat.reshape(shape)
+        rot2 = self._roll_rot_batch(kfix, types2, rot2, update.reshape(shape))
+        return types2, rot2
+
+    def merge_batch(self, key, ta, ra, tb, rb
+                    ) -> tuple[jnp.ndarray, jnp.ndarray]:
+        """Batched merge: keep agreeing cells, distribute the leftover
+        chiplets uniformly over the disagreeing cells (random-rank fill ==
+        host's shuffled fill), carry rotations only where both agree."""
+        B = ta.shape[0]
+        k1, k2 = jax.random.split(key)
+        match = ta == tb
+        taf = ta.reshape(B, self.cells)
+        mf = match.reshape(B, self.cells)
+        carried = jnp.where(mf, taf, -2)
+        rem = [self._counts[k] - (carried == k).sum(axis=1) for k in range(3)]
+        prio = jax.random.uniform(k1, (B, self.cells))
+        prio = jnp.where(carried == -2, prio, 2.0)   # resolved cells: last
+        rank = jnp.argsort(jnp.argsort(prio, axis=1), axis=1)
+        c0 = rem[0][:, None]
+        c1 = c0 + rem[1][:, None]
+        c2 = c1 + rem[2][:, None]
+        fill = jnp.where(rank < c0, COMPUTE,
+                         jnp.where(rank < c1, MEMORY,
+                                   jnp.where(rank < c2, IO, -1)))
+        types = jnp.where(mf, taf, fill.astype(ta.dtype))
+        types = types.reshape(B, self.R, self.C, self.Z)
+        rot_match = match & (ra == rb)
+        rot0 = jnp.where(rot_match, ra, 0).astype(ra.dtype)
+        update = ~(rot_match & self._rotatable_cells(types))
+        rot = self._roll_rot_batch(k2, types, rot0, update)
+        return types, rot

@@ -47,7 +47,8 @@ import numpy as np
 
 from .baseline import MeshBaseline
 from .cache import LRUCache
-from .chiplets import LARGE_HOMOG, ArchSpec, paper_arch, resolve_arch
+from .chiplets import (ARCH3D, LARGE_HOMOG, ArchSpec, paper_arch,
+                       resolve_arch)
 from .objective import Objective, Schedule, TrafficMix
 from .optimize import (Evaluator, OptResult, best_random,
                        best_random_batched, best_random_batched_steps,
@@ -309,6 +310,15 @@ LARGE_DEFAULTS = ArchDefaults(
     sa=SAParams(t0_temp=35.0, block_len=50),
     mutation_mode="neighbor-one")
 
+# Defaults for the 3D / hierarchical families (repro.arch3d): homog64-row
+# GA/SA shapes, slightly smaller population — the stacked grids are
+# denser (every cell occupied), so generations converge in fewer, larger
+# moves.
+ARCH3D_DEFAULTS = ArchDefaults(
+    ga=GAParams(population=32, elitism=6, tournament=6),
+    sa=SAParams(t0_temp=35.0, block_len=50),
+    mutation_mode="neighbor-one")
+
 
 def arch_family(arch_name: str) -> tuple[str, int]:
     if arch_name in LARGE_GRIDS:
@@ -316,6 +326,10 @@ def arch_family(arch_name: str) -> tuple[str, int]:
         # 32/64 substring — the paper heuristics below would misfile it).
         n = sum(LARGE_HOMOG[arch_name])
         return "homog", n
+    if arch_name in ARCH3D:
+        # 3D/hierarchical families ("stack3d32" contains "32" but is not
+        # a paper arch; keyed before the heuristics).
+        return "arch3d", sum(ARCH3D[arch_name])
     fam = "homog" if arch_name.startswith("homog") else "hetero"
     size = 32 if "32" in arch_name else 64
     return fam, size
@@ -324,6 +338,8 @@ def arch_family(arch_name: str) -> tuple[str, int]:
 def paper_defaults(arch_name: str) -> ArchDefaults:
     if arch_name in LARGE_GRIDS:
         return LARGE_DEFAULTS
+    if arch_name in ARCH3D:
+        return ARCH3D_DEFAULTS
     return PAPER_DEFAULTS[arch_family(arch_name)]
 
 
@@ -339,6 +355,11 @@ def make_rep(arch: ArchSpec, arch_name: str,
     plus the LARGE_GRIDS 100+-chiplet families)."""
     fam, _ = arch_family(arch_name)
     mode = mutation_mode or paper_defaults(arch_name).mutation_mode
+    if fam == "arch3d":
+        # Lazy import: core must not depend on the arch3d package at
+        # import time (arch3d imports core.topology/proxies).
+        from repro.arch3d.families import make_rep3d
+        return make_rep3d(arch, arch_name, mutation_mode=mode)
     if fam == "homog":
         if arch_name in LARGE_GRIDS:
             R, C, hex_side = LARGE_GRIDS[arch_name]
@@ -366,7 +387,8 @@ _SCORER_STATS = {"hits": 0, "misses": 0}
 
 
 def get_scorer(layout, *, chunk: int, backend: str,
-               objective: Objective | None = None) -> Callable:
+               objective: Objective | None = None,
+               shape_key=None) -> Callable:
     """Cached jitted batched scorer (with the compiled objective lowered
     in).  Two Evaluators over the same layout (e.g. sweep repetitions, or
     configs differing only in budget/seed) share one compiled function
@@ -377,9 +399,16 @@ def get_scorer(layout, *, chunk: int, backend: str,
     (:meth:`Objective.structure_key`: names + params) forces a new
     compilation.  Callers must pass their weights at call time
     (``Evaluator`` always does); the baked-in defaults belong to whichever
-    objective compiled first."""
+    objective compiled first.
+
+    ``shape_key`` splits the cache for representations whose graph-array
+    shapes are not determined by the layout alone: 3D families over the
+    same chiplet set (``repro.arch3d``, e.g. stack3d32 vs torus3d32)
+    share a ``Layout`` but emit different edge-slot counts, and
+    ``run_sweep`` groups lockstep-stacked runs by scorer identity — a
+    shared callable would concatenate unlike batches."""
     objective = objective if objective is not None else Objective()
-    key = (layout, chunk, backend, objective.structure_key())
+    key = (layout, chunk, backend, objective.structure_key(), shape_key)
     hit = key in _SCORER_CACHE
     _SCORER_STATS["hits" if hit else "misses"] += 1
     if not hit:
@@ -439,7 +468,8 @@ def make_evaluator(rep, arch: ArchSpec, *, rng: np.random.Generator,
                          schedule=schedule, norm=norm, archive_k=archive_k,
                          workload=workload)
     scorer = get_scorer(rep.layout, chunk=chunk, backend=backend,
-                        objective=objective)
+                        objective=objective,
+                        shape_key=getattr(rep, "scorer_shape_key", None))
     return Evaluator(rep, arch, rng=rng, norm_samples=norm_samples,
                      chunk=chunk, scorer=scorer, objective=objective,
                      schedule=schedule, norm=norm, archive_k=archive_k,

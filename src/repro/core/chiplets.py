@@ -259,8 +259,35 @@ def large_arch(which: str, config: str = "baseline") -> ArchSpec:
     return homogeneous_arch(nc, nm, ni, config)
 
 
+# 3D / hierarchical families (repro.arch3d): chiplet counts per family
+# name — (n_compute, n_memory, n_io), homogeneous 3mm chiplets; grid dims
+# and family structure live in ``repro.arch3d.families.FAMILIES3D``.
+# Counts fill the grids exactly (32 = 4x4x2, 64 = 4x4x4) while keeping
+# roughly the paper's compute-heavy shape.
+ARCH3D = {
+    "stack3d32": (24, 4, 4),
+    "stack3d64": (52, 6, 6),
+    "gw3d64": (52, 6, 6),
+    "torus3d32": (24, 4, 4),
+    "express3d32": (24, 4, 4),
+}
+
+
+def arch3d_arch(which: str, config: str = "baseline") -> ArchSpec:
+    """A 3D/hierarchical family's ArchSpec (homogeneous chiplet mix; the
+    3D structure lives in the representation, not the chiplet set)."""
+    try:
+        nc, nm, ni = ARCH3D[which]
+    except KeyError:
+        raise ValueError(which) from None
+    return homogeneous_arch(nc, nm, ni, config)
+
+
 def resolve_arch(which: str, config: str = "baseline") -> ArchSpec:
-    """Any named architecture: the paper's four or a LARGE_HOMOG family."""
+    """Any named architecture: the paper's four, a LARGE_HOMOG family, or
+    a 3D/hierarchical ARCH3D family."""
     if which in LARGE_HOMOG:
         return large_arch(which, config)
+    if which in ARCH3D:
+        return arch3d_arch(which, config)
     return paper_arch(which, config)

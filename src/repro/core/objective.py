@@ -61,6 +61,12 @@ from .registries import (OBJECTIVE_TERMS, SCHEDULE_RAMPS, ObjectiveTermEntry,
 
 _EPS = 1.0e-6
 
+# Objective terms that turn the scorer into a traffic-driven evaluation:
+# they read the netsim rate model's per-class metrics, so the evaluator
+# must carry a workload whose packed demand rides along as the runtime
+# ``_demand`` operand (see repro.netsim.workload / proxies.make_scorer).
+TRACE_TERMS = ("trace-lat", "trace-thr")
+
 # Normalizer vector layout (stable; the jitted scorer takes this as a
 # runtime argument so normalizer draws never retrace):
 NORM_SLOTS = tuple([f"lat_{t}" for t in TRAFFIC_TYPES]
@@ -445,6 +451,42 @@ def _trace_lat(sample, norms, obj, params):
     for t in TRAFFIC_TYPES:
         acc = acc + (norms[f"w_lat_{t}"] * sample[f"trace_lat_{t}"]
                      / jnp.maximum(norms[f"lat_{t}"], _EPS))
+    return acc
+
+
+def _trace_thr_host(metrics, batch, norms, obj, params):
+    if "trace_thr_c2c" not in metrics:
+        raise KeyError(
+            "trace-thr host evaluation needs trace_thr_* metrics; score "
+            "through an evaluator built with a workload so the scorer "
+            "emits them")
+    acc = None
+    for t in TRAFFIC_TYPES:
+        thr = np.asarray(metrics[f"trace_thr_{t}"], np.float64)
+        inv = np.where(thr > 0, 1.0 / np.maximum(thr, _EPS), 0.0)
+        v = norms[f"w_thr_{t}"] * inv / max(norms[f"inv_thr_{t}"], _EPS)
+        acc = v if acc is None else acc + v
+    return acc
+
+
+@register_objective_term("trace-thr", host_fn=_trace_thr_host)
+def _trace_thr(sample, norms, obj, params):
+    """Normalized per-class *throughput* cost from the device netsim rate
+    model: per traffic class, the maximum sustainable aggregate flit
+    injection rate before some link saturates (the class's demand scaled
+    up against the other classes' fixed link loads — see
+    ``repro.netsim.model``).  Cost is the inverse (lower is better),
+    normalized by the same per-class inverse-throughput scale as the
+    ``inv-thr`` proxy term and weighted by the runtime traffic-mix
+    throughput weights; classes without demand contribute 0.  Requires an
+    evaluator-attached workload, which enters the scorer as the runtime
+    ``_demand`` operand — swapping traces or rates never retraces."""
+    acc = 0.0
+    for t in TRAFFIC_TYPES:
+        thr = sample[f"trace_thr_{t}"]
+        inv = jnp.where(thr > 0, 1.0 / jnp.maximum(thr, _EPS), 0.0)
+        acc = acc + (norms[f"w_thr_{t}"] * inv
+                     / jnp.maximum(norms[f"inv_thr_{t}"], _EPS))
     return acc
 
 

@@ -56,8 +56,8 @@ import numpy as np
 
 from .cache import LRUCache
 from .cost import CostNormalizers
-from .objective import (NORM_DIM, Objective, compile_schedule, norms_vec,
-                        objective_cost_host, weights_vec)
+from .objective import (NORM_DIM, TRACE_TERMS, Objective, compile_schedule,
+                        norms_vec, objective_cost_host, weights_vec)
 from .placement_hetero import HeteroRep
 from .placement_homog import HomogRep
 from .proxies import make_ranker, make_scorer
@@ -195,12 +195,13 @@ class Evaluator:
         # workloads never retrace and stacked cross-workload scoring
         # carries per-row demand.
         self.workload = workload
-        needs_demand = any(t.name == "trace-lat"
+        needs_demand = any(t.name in TRACE_TERMS
                            for t in self.objective.terms)
         if needs_demand and workload is None:
             raise ValueError(
-                "objective has a 'trace-lat' term but no workload; pass "
-                "Evaluator(..., workload=netsim.Workload(...))")
+                "objective has a trace term (trace-lat/trace-thr) but no "
+                "workload; pass Evaluator(..., "
+                "workload=netsim.Workload(...))")
         self._demand_vec = None
         if needs_demand:
             if workload.n != rep.layout.N:
@@ -250,12 +251,12 @@ class Evaluator:
     @property
     def demand_vec(self) -> np.ndarray | None:
         """The workload's packed demand operand (``None`` unless the
-        objective carries a ``trace-lat`` term)."""
+        objective carries a trace term — trace-lat / trace-thr)."""
         return self._demand_vec
 
     def _with_demand(self, batch: dict) -> dict:
         """Attach the workload's `_demand` rows to a scoring batch (no-op
-        without a trace-lat workload, or when rows — e.g. per-row stacked
+        without a trace-term workload, or when rows — e.g. per-row stacked
         demand — are already present)."""
         if self._demand_vec is None or "_demand" in batch:
             return batch
@@ -768,14 +769,50 @@ class DevicePipeline:
                    mask_key)
         elif isinstance(rep, HeteroRep):
             key = ("hetero", rep.arch, rep.mutation_mode)
+        elif hasattr(rep, "device_stage_key") and hasattr(rep, "graph_batch"):
+            # Pluggable grid-like reps (e.g. repro.arch3d.Homog3DRep):
+            # the rep names its own cache key — tier latency values are
+            # runtime operands and must NOT appear in it.
+            key = rep.device_stage_key()
         else:
             raise TypeError(
-                "device-resident batched optimizers require a HomogRep or "
-                f"HeteroRep placement representation, got {type(rep)!r}")
+                "device-resident batched optimizers require a HomogRep, "
+                "HeteroRep, or a rep exposing device_stage_key()/"
+                f"graph_batch()/batch_ops(), got {type(rep)!r}")
         if key in cls._STAGE_CACHE:
             return cls._STAGE_CACHE[key]
         ops = rep.batch_ops()
-        if isinstance(rep, HomogRep):
+        if not isinstance(rep, (HomogRep, HeteroRep)):
+            gb = rep.graph_batch()
+
+            # Stage closures take the tier latency vector as a trailing
+            # operand (DevicePipeline.__init__ binds the rep's current
+            # values), so reps differing only in tsv/backbone factors
+            # share these compiled stages — zero retraces.
+            @functools.partial(jax.jit, static_argnames=("n",))
+            def _gen(key, n, tiers):
+                t, r = ops.random_batch(key, n)
+                return t, r, gb.build(t, r, tiers)
+
+            @jax.jit
+            def _mut(key, t, r, tiers):
+                nt, nr = ops.mutate_batch(key, t, r)
+                return nt, nr, gb.build(nt, nr, tiers)
+
+            @jax.jit
+            def _child(key, pat, par, pbt, pbr, p_mut, tiers):
+                k1, k2, k3 = jax.random.split(key, 3)
+                t, r = ops.merge_batch(k1, pat, par, pbt, pbr)
+                mt, mr = ops.mutate_batch(k2, t, r)
+                m = jax.random.bernoulli(
+                    k3, p_mut, (t.shape[0],)).reshape(
+                    (-1,) + (1,) * (t.ndim - 1))
+                t = jnp.where(m, mt, t)
+                r = jnp.where(m, mr, r)
+                return t, r, gb.build(t, r, tiers)
+
+            _rebuild = jax.jit(gb.build)
+        elif isinstance(rep, HomogRep):
             gb = HomogGraphBatch(rep.arch, rep.R, rep.C, area=rep.area)
 
             @functools.partial(jax.jit, static_argnames=("n",))
@@ -857,6 +894,18 @@ class DevicePipeline:
         self.ev = ev
         (self.ops, self.graphs, self._gen, self._mut,
          self._child, self._rebuild) = self._stages(ev.rep)
+        tiers = getattr(ev.rep, "tier_values", None)
+        if tiers is not None:
+            # Bind this rep's tier latency vector as the stages' trailing
+            # runtime operand (shared compiled stages across tier values).
+            tv = jnp.asarray(np.asarray(tiers, np.float32))
+            _gen, _mut, _child, _reb = (self._gen, self._mut, self._child,
+                                        self._rebuild)
+            self._gen = lambda key, n: _gen(key, n, tv)
+            self._mut = lambda key, t, r: _mut(key, t, r, tv)
+            self._child = lambda key, pat, par, pbt, pbr, p: _child(
+                key, pat, par, pbt, pbr, p, tv)
+            self._rebuild = lambda t, r: _reb(t, r, tv)
 
     def rebuild(self, t, r) -> dict:
         """Graph batch for existing solutions (no RNG): re-scoring a

@@ -40,6 +40,7 @@ from __future__ import annotations
 import dataclasses
 import itertools
 import json
+import warnings
 from dataclasses import dataclass, field
 from typing import Mapping
 
@@ -192,6 +193,21 @@ def _hv2d(P, ref):
     return hv
 
 
+@jax.jit
+def _hv3d(P, ref):
+    # Grid sweep over the x/y coordinate lattice: cell (i, j) spans
+    # [xs[i], xs[i+1]) x [ys[j], ys[j+1]); its dominated depth is
+    # ref_z - min z over points covering the cell's lower corner.
+    xs = jnp.sort(P[:, 0])
+    ys = jnp.sort(P[:, 1])
+    dx = jnp.diff(jnp.append(xs, ref[0]))
+    dy = jnp.diff(jnp.append(ys, ref[1]))
+    cover = ((P[None, None, :, 0] <= xs[:, None, None])
+             & (P[None, None, :, 1] <= ys[None, :, None]))
+    z = jnp.min(jnp.where(cover, P[None, None, :, 2], ref[2]), axis=-1)
+    return (dx[:, None] * dy[None, :] * (ref[2] - z)).sum()
+
+
 def _hv_rec(pts: np.ndarray, ref: np.ndarray) -> float:
     """Exact hypervolume by recursive dimension sweep (host float64;
     fronts are small).  ``pts`` must be clipped to ``ref``."""
@@ -214,16 +230,26 @@ def hypervolume(Y, ref, *, device: bool | None = None) -> float:
     """Dominated hypervolume of (lower is better) points ``Y [B, n]`` vs a
     reference point ``ref [n]`` (every coordinate worse than the front).
 
-    Exact for any ``n`` via the host recursion; for ``n == 2`` a jitted
-    sort-and-sweep computes the same value on device (the default there —
-    pass ``device=False`` to force the host path, e.g. for testing)."""
+    Exact for any ``n``.  ``n == 2`` runs a jitted sort-and-sweep and
+    ``n == 3`` a jitted coordinate-lattice sweep (O(B^3) elements — fronts
+    are small) on device by default; pass ``device=False`` to force the
+    host recursion, e.g. for testing.  ``n > 3`` always falls back to the
+    host recursion (exponential in ``n``) and warns."""
     Y = np.asarray(Y, np.float64)
     ref = np.asarray(ref, np.float64)
     if Y.size == 0:
         return 0.0
     pts = np.minimum(Y, ref)             # clip: no negative contributions
-    if (device is None or device) and Y.shape[1] == 2:
-        return float(_hv2d(jnp.asarray(pts), jnp.asarray(ref)))
+    if device is None or device:
+        if Y.shape[1] == 2:
+            return float(_hv2d(jnp.asarray(pts), jnp.asarray(ref)))
+        if Y.shape[1] == 3:
+            return float(_hv3d(jnp.asarray(pts), jnp.asarray(ref)))
+    if Y.shape[1] > 3:
+        warnings.warn(
+            f"hypervolume: no device path for n={Y.shape[1]} objectives; "
+            "using the exact host recursion (cost grows exponentially "
+            "with n)", stacklevel=2)
     return _hv_rec(pts, ref)
 
 

@@ -28,7 +28,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from .chiplets import COMPUTE, IO, MEMORY, TRAFFIC_TYPES, ArchSpec
-from .objective import NORM_DIM, compile_objective, weight_dim, weights_vec
+from .objective import (NORM_DIM, TRACE_TERMS, compile_objective, weight_dim,
+                        weights_vec)
 
 INF_CUT = 1.0e8   # entries >= this are treated as "unreachable"
 _COUNT_CLIP = 1.0e30
@@ -203,18 +204,20 @@ def make_scorer(layout: Layout, *, fw_impl=fw_counts_ref, chunk: int = 16,
     weight grids and constraint-hardening schedules share one compiled
     scorer — only the term structure is trace-time.
 
-    When the objective carries a ``trace-lat`` term, the batch must also
-    carry a ``_demand`` key (``[P, demand_dim(N)]`` packed workload
-    rows, see :mod:`repro.netsim.workload`); the traffic rate model then
-    runs fused on the same FW solve and the output gains per-class
-    ``trace_lat_{t}`` metrics.  Demand is a runtime operand like norms
-    and weights: different workloads/mixes never retrace.
+    When the objective carries a trace term (``trace-lat`` /
+    ``trace-thr``), the batch must also carry a ``_demand`` key
+    (``[P, demand_dim(N)]`` packed workload rows, see
+    :mod:`repro.netsim.workload`); the traffic rate model then runs
+    fused on the same FW solve and the output gains per-class
+    ``trace_lat_{t}`` / ``trace_thr_{t}`` metrics.  Demand is a runtime
+    operand like norms and weights: different workloads/mixes never
+    retrace.
     """
     pairs = _type_pairs(layout)
     conn = (layout.Vp + np.arange(layout.N, dtype=np.int32),
             layout.Vp + layout.N + np.arange(layout.N, dtype=np.int32))
     needs_demand = objective is not None and any(
-        t.name == "trace-lat" for t in objective.terms)
+        t.name in TRACE_TERMS for t in objective.terms)
     trace_fn = None
     if needs_demand:
         # Lazy import: repro.netsim.model imports this module for the FW
@@ -250,9 +253,9 @@ def make_scorer(layout: Layout, *, fw_impl=fw_counts_ref, chunk: int = 16,
         if needs_demand:
             if "_demand" not in batch:
                 raise ValueError(
-                    "objective has a 'trace-lat' term but the batch "
-                    "carries no '_demand' workload operand; score through "
-                    "an Evaluator built with a workload "
+                    "objective has a trace term (trace-lat/trace-thr) but "
+                    "the batch carries no '_demand' workload operand; "
+                    "score through an Evaluator built with a workload "
                     "(see repro.netsim.workload.Workload)")
             # The rate model's [N, E, N] ECMP tensor joins the budget.
             per = max(per, layout.N * layout.N * E)

@@ -1,7 +1,7 @@
 """Named registries for the experiment API (optimizers, scorer backends,
-objective terms, schedule ramps).
+objective terms, schedule ramps, grid augmentations).
 
-The PlaceIT pipeline is pluggable at four seams:
+The PlaceIT pipeline is pluggable at five seams:
 
 * **optimizers** — search algorithms over a placement representation, all
   with the uniform signature ``(evaluator, rng, budget, params) -> OptResult``
@@ -19,6 +19,11 @@ The PlaceIT pipeline is pluggable at four seams:
   (``objective.Schedule``): built-in ``linear`` / ``cosine`` / ``step``,
   with the uniform signature ``(t, start, end, params) -> scale`` over the
   run's progress fraction ``t`` in [0, 1].
+* **augmentations** — alternatives to the paper's greedy augmentation for
+  grid families: extra static candidate adjacencies (wraparound, express
+  skip links) with the uniform signature
+  ``(R, C, Z, sz_mm, params) -> list[AdjRecord]``
+  (see ``repro.arch3d.topology``); built-in ``torus`` / ``express``.
 
 Entries are registered with decorators::
 
@@ -97,6 +102,7 @@ OPTIMIZERS = Registry("optimizer")
 SCORER_BACKENDS = Registry("scorer backend")
 OBJECTIVE_TERMS = Registry("objective term")
 SCHEDULE_RAMPS = Registry("schedule ramp")
+AUGMENTATIONS = Registry("augmentation")
 
 
 def register_optimizer(name: str, *, params_cls: type):
@@ -134,6 +140,18 @@ def register_schedule_ramp(name: str):
     run's progress fraction in [0, 1]; see ``objective.Schedule``)."""
     def deco(fn):
         SCHEDULE_RAMPS.add(name, fn)
+        return fn
+    return deco
+
+
+def register_augmentation(name: str):
+    """Decorator: register a grid augmentation
+    ``fn(R, C, Z, sz_mm, params) -> list[AdjRecord]`` under ``name`` —
+    extra static candidate adjacencies (masked like the base grid's) that
+    replace the paper's greedy leftover-PHY augmentation on grid families
+    (see ``repro.arch3d.topology``)."""
+    def deco(fn):
+        AUGMENTATIONS.add(name, fn)
         return fn
     return deco
 

@@ -2,10 +2,10 @@
 
 This is the searchable counterpart of the event-driven oracle in
 ``repro.netsim.sim``: a batched, jitted queueing approximation whose
-per-placement output (``trace_lat_{t}`` per traffic class) the
-``trace-lat`` objective term turns into a cost summand, so placements
-are optimized *directly against traffic* instead of the uniform-pair
-proxies.
+per-placement outputs (``trace_lat_{t}`` / ``trace_thr_{t}`` per traffic
+class) the ``trace-lat`` / ``trace-thr`` objective terms turn into cost
+summands, so placements are optimized *directly against traffic* instead
+of the uniform-pair proxies.
 
 Per placement, given the Floyd-Warshall distances ``D`` and shortest-path
 counts ``Ncnt`` the proxy scorer already computes:
@@ -44,8 +44,10 @@ from .workload import K, demand_dim
 # an overloaded link costs a large-but-finite, still-monotone penalty.
 Q_CAP = 1.0e4
 
-TRACE_METRIC_KEYS = tuple(f"trace_lat_{t}" for t in TRAFFIC_TYPES) + (
-    "trace_max_load",)
+TRACE_METRIC_KEYS = (
+    tuple(f"trace_lat_{t}" for t in TRAFFIC_TYPES)
+    + tuple(f"trace_thr_{t}" for t in TRAFFIC_TYPES)
+    + ("trace_max_load",))
 
 
 def unpack_demand(dem_vec, n: int):
@@ -64,7 +66,12 @@ def trace_metrics_one(D, Ncnt, W, edges, edge_mask, dem_vec, *, srcs, dsts,
     the arch's chiplets (``layout.Vp + i`` / ``layout.Vp + N + i``), so
     chiplet-level demand maps onto the PHY-level FW matrices.  Returns
     ``trace_lat_{t}`` per traffic class (0 where the class has no
-    demand) plus ``trace_max_load`` (bottleneck link flit load).
+    demand), ``trace_thr_{t}`` — the class's maximum sustainable
+    aggregate injection rate [flits/cycle]: its demand scaled by the
+    largest factor alpha that keeps every link load under capacity given
+    the *other* classes' fixed loads (``alpha = min_e headroom_e /
+    rho_k_e``, capped at ``Q_CAP``) — plus ``trace_max_load``
+    (bottleneck link flit load).
     """
     srcs = jnp.asarray(srcs)
     dsts = jnp.asarray(dsts)
@@ -105,12 +112,27 @@ def trace_metrics_one(D, Ncnt, W, edges, edge_mask, dem_vec, *, srcs, dsts,
     hops = use.sum(axis=1)                                   # expected D2D hops
     reach = Dsd < INF_CUT
     base = jnp.where(reach, Dsd + router_pipeline * hops + queue, 0.0)
+    # Per-class link loads and the saturation throughput: scale class k's
+    # demand by alpha until its most loaded link exhausts the headroom the
+    # other classes leave (1 - sum_{j!=k} rho_j); unreachable pairs carry
+    # no `use` so they never load a link.  Classes using no link (or with
+    # no demand) get alpha = Q_CAP / thr = 0 respectively.
+    fk = rate * flits[:, None, None]                         # [K, n, n]
+    rho_k = jnp.einsum("kst,set->ke", fk, use)               # [K, E]
+    other = jnp.maximum(rho[None, :] - rho_k, 0.0)
+    ratio = jnp.where(
+        edge_mask[None, :] & (rho_k > 1e-12),
+        jnp.maximum(1.0 - other, 1.0 / Q_CAP) / jnp.maximum(rho_k, 1e-12),
+        jnp.inf)
+    alpha = jnp.minimum(jnp.min(ratio, axis=1), Q_CAP)       # [K]
     out = {"trace_max_load": jnp.where(edge_mask, rho, 0.0).max()}
     for k, t in enumerate(TRAFFIC_TYPES):
         r = jnp.where(reach, rate[k], 0.0)
         tot = r.sum()
         lat = (r * base).sum() / jnp.maximum(tot, 1e-12) + (flits[k] - 1.0)
         out[f"trace_lat_{t}"] = jnp.where(tot > 0, lat, 0.0)
+        out[f"trace_thr_{t}"] = jnp.where(
+            tot > 0, alpha[k] * tot * flits[k], 0.0)
     return out
 
 

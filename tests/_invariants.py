@@ -41,6 +41,29 @@ def assert_valid_homog_batch(rep, t, r):
                         assert int(r[b, rr, cc]) in occ
 
 
+def assert_valid_homog3d_batch(rep, t, r):
+    """Host-side invariants for a stacked [B, R, C, Z] (types, rot) batch
+    (``repro.arch3d.Homog3DRep``): per-kind cell counts, zero rotation on
+    non-rotatable cells, and rotations drawn from the cell's record-backed
+    candidate cascade (link-partner occupied -> any record -> all four)."""
+    want = arch_counts(rep.arch)
+    t, r = np.asarray(t), np.asarray(r)
+    for b in range(t.shape[0]):
+        assert counts_of(t[b]) == want
+        assert (r[b][t[b] == COMPUTE] == 0).all()
+        assert (r[b][t[b] < 0] == 0).all()
+        tflat = t[b].reshape(-1)
+        rflat = r[b].reshape(-1)
+        for cell in range(tflat.shape[0]):
+            k = tflat[cell]
+            if k >= 0 and rep._rotatable.get(int(k), False):
+                per_rot = rep._rot_other[cell]
+                occ = [rr for rr in range(4)
+                       if any(tflat[o] >= 0 for o in per_rot[rr])]
+                anyr = [rr for rr in range(4) if per_rot[rr]]
+                assert int(rflat[cell]) in (occ or anyr or [0, 1, 2, 3])
+
+
 def assert_valid_hetero_batch(rep, o, r):
     """Host-side invariants for a stacked [B, N] (order, rots) batch:
     per-kind counts (type-sequence validity) and per-kind non-isomorphic

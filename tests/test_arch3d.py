@@ -1,0 +1,393 @@
+"""3D & hierarchical arch families (``repro.arch3d``) + satellites.
+
+Covers the new-subsystem acceptance gates:
+
+* family record structure (hand-counted adjacency per family),
+* device graph builder bit-for-bit vs the independent host reference
+  (all four families, both chiplet configs, random + mutated placements),
+* TSV latency model with hand-computed expectations — the vertical tier
+  value IS the stacked-pair distance, and sweeping ``tsv_slowdown``
+  flips which arrangement (stacked vs planar) infers the shorter route,
+* zero-retrace: tier vectors are runtime jit operands; reps differing
+  only in tier factors share compiled ``DevicePipeline`` stages,
+* end-to-end: ``run_sweep`` (ga-batched + trace-lat) and ``DesignEngine``
+  on 3D families,
+* the ``trace-thr`` objective term (device == float64 host),
+* workload-aware Pareto axes over trace-term weights,
+* 3-objective hypervolume device sweep vs the host recursion (+ the
+  n > 3 host-fallback warning).
+"""
+import dataclasses
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.arch3d import (FAMILIES3D, TIER_BACKBONE, TIER_PLANAR,
+                          TIER_VERTICAL, default_tier_values, make_rep3d)
+from repro.core.api import (Budget, ExperimentConfig, arch_family, make_rep,
+                            make_evaluator, paper_defaults, run_sweep)
+from repro.core.chiplets import ARCH3D, TRAFFIC_TYPES, resolve_arch
+from repro.core.objective import (Objective, TermSpec, objective_cost_host)
+from repro.core.optimize import DevicePipeline
+from repro.core.pareto import (ParetoGridSpec, _hv_rec, hypervolume,
+                               run_pareto_sweep)
+from repro.core.proxies import fw_counts_ref
+from repro.core.topology import stack_graphs
+from repro.netsim import Workload
+
+FAMILIES = tuple(FAMILIES3D)
+
+
+def _rep(name, config="baseline", **kw):
+    arch = resolve_arch(name, config)
+    rep = make_rep3d(arch, name)
+    return dataclasses.replace(rep, **kw) if kw else rep
+
+
+def _wl(arch, traffic="c2m", rate=0.01):
+    return Workload.synthetic(arch.kinds(), traffic, rate)
+
+
+# ---------------------------------------------------------------------------
+# Family structure.
+# ---------------------------------------------------------------------------
+
+def test_family_record_counts_hand_counted():
+    # stack3d32 (4x4x2): 24 planar/layer * 2 + 16 TSV pillars
+    assert len(_rep("stack3d32").records) == 64
+    # gw3d64 (4x4x4, 2x2 clusters): 16 intra/layer * 4 + 4 backbone/layer
+    # * 4 + 4 gateways * 3 vertical pairs
+    assert len(_rep("gw3d64").records) == 92
+    # torus3d32: 64 + (4 row + 4 col wraps) * 2 layers
+    assert len(_rep("torus3d32").records) == 80
+    # express3d32: 64 + 16 stride-2 skips * 2 layers
+    assert len(_rep("express3d32").records) == 96
+
+
+def test_family_tier_structure():
+    rep = _rep("gw3d64")
+    tiers = {a.tier for a in rep.records}
+    assert tiers == {TIER_PLANAR, TIER_BACKBONE, TIER_VERTICAL}
+    # W_INTRA < W_BACKBONE < W_VERTICAL with the default factors
+    tv = rep.tier_values
+    assert tv[TIER_PLANAR] < tv[TIER_BACKBONE] < tv[TIER_VERTICAL]
+    np.testing.assert_array_equal(tv, np.float32([25.0, 26.0, 28.0]))
+    # gateway verticals exist only at cluster-corner gateways
+    verts = [a for a in rep.records if a.tier == TIER_VERTICAL]
+    assert len(verts) == 4 * (rep.Z - 1)
+
+
+def test_resolve_and_defaults_dispatch():
+    for name in FAMILIES:
+        fam, n = arch_family(name)
+        assert fam == "arch3d" and n == sum(ARCH3D[name])
+        arch = resolve_arch(name)
+        assert len(arch.chiplets) == n
+        assert paper_defaults(name).mutation_mode == "neighbor-one"
+        rep = make_rep(arch, name)
+        assert rep.records  # api dispatches to the arch3d factory
+
+
+def test_unknown_family_and_bad_augment_raise():
+    arch = resolve_arch("stack3d32")
+    with pytest.raises(ValueError, match="unknown 3D arch family"):
+        make_rep3d(arch, "stack3d999")
+    with pytest.raises(KeyError):
+        _rep("stack3d32", augment="no-such-augment").records
+    with pytest.raises(ValueError, match="stride"):
+        _rep("express3d32", augment_params={"stride": 1})
+
+
+def test_custom_augmentation_registers():
+    from repro.arch3d.topology import AdjRecord, _cid
+    from repro.core.registries import AUGMENTATIONS, register_augmentation
+
+    if "diag-test" not in AUGMENTATIONS.names():
+        @register_augmentation("diag-test")
+        def diag(R, C, Z, sz_mm, params):
+            return [AdjRecord(cell1=_cid(0, 0, 0, C, Z),
+                              cell2=_cid(1, 1, 0, C, Z),
+                              loc1=1, loc2=3, rot1=1, rot2=3,
+                              tier=TIER_BACKBONE, length=float(sz_mm))]
+
+    rep = _rep("stack3d32", augment="diag-test")
+    assert len(rep.records) == 65
+
+
+# ---------------------------------------------------------------------------
+# Device builder bit-for-bit vs the host reference.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", FAMILIES)
+@pytest.mark.parametrize("config", ["baseline", "placeit"])
+def test_builder_bitforbit_vs_host(name, config):
+    rep = _rep(name, config)
+    rng = np.random.default_rng(123)
+    sols = [rep.random(rng) for _ in range(3)]
+    for s in list(sols):
+        sols.append(rep.mutate(s, rng))
+    host = stack_graphs([rep.score_graph(s) for s in sols])
+    dev = rep.graph_batch().build(
+        jnp.asarray(np.stack([s[0] for s in sols])),
+        jnp.asarray(np.stack([s[1] for s in sols])))
+    for k in ("W", "edges", "edge_mask", "area", "edge_len"):
+        assert np.array_equal(np.asarray(host[k]), np.asarray(dev[k])), k
+
+
+def test_gateway_rotations_avoid_recordless_sides():
+    """1-PHY chiplets in a gateway family never roll a rotation whose
+    side carries no record (e.g. cross-cluster) — the fix that makes
+    connected gateway placements findable."""
+    rep = _rep("gw3d64")
+    rng = np.random.default_rng(7)
+    for _ in range(5):
+        types, rot = rep.random(rng)
+        tflat, rflat = types.reshape(-1), rot.reshape(-1)
+        for cell in range(tflat.shape[0]):
+            k = int(tflat[cell])
+            if k >= 0 and rep._rotatable.get(k, False):
+                anyr = [i for i in range(4) if rep._rot_other[cell][i]]
+                assert int(rflat[cell]) in anyr
+
+
+# ---------------------------------------------------------------------------
+# TSV latency model (hand-computed expectations).
+# ---------------------------------------------------------------------------
+
+def test_tier_values_formula():
+    arch = resolve_arch("stack3d32")
+    lp, ll = arch.latency.l_phy, arch.latency.l_link
+    tv = default_tier_values(arch, tsv_slowdown=16.0, backbone_factor=3.0)
+    np.testing.assert_array_equal(
+        tv, np.float32([2 * lp + ll, 2 * lp + 3 * ll, 2 * lp + 16 * ll]))
+
+
+@pytest.mark.parametrize("tsv", [1.0, 4.0, 16.0])
+def test_vertical_pair_distance_is_tier_value(tsv):
+    """FW distance between directly stacked chiplets == 2*l_phy +
+    l_link*tsv_slowdown (the TSV latency model, hand-computed)."""
+    from repro.arch3d.topology import _host_instances
+    rep = _rep("stack3d32", "placeit", tsv_slowdown=tsv)
+    arch = rep.arch
+    expect = 2 * arch.latency.l_phy + arch.latency.l_link * tsv
+    rng = np.random.default_rng(0)
+    sol = rep.random(rng)
+    D, _ = fw_counts_ref(jnp.asarray(rep.score_graph(sol).W))
+    D = np.asarray(D)
+    Vp, N = rep.layout.Vp, len(arch.chiplets)
+    inst = _host_instances(arch, sol[0].reshape(-1)).reshape(4, 4, 2)
+    hit = False
+    for r in range(4):
+        for c in range(4):
+            i, j = inst[r, c, 0], inst[r, c, 1]
+            if i >= 0 and j >= 0:
+                d = D[Vp + i, Vp + N + j]
+                assert d <= expect + 1e-4     # direct TSV bounds the route
+                hit |= abs(d - expect) < 1e-4
+    assert hit    # some stacked pair takes the TSV at exactly the tier cost
+
+
+def test_tsv_slowdown_flips_preferred_arrangement():
+    """Regression with hand-computed expectation: whether a hot pair is
+    cheaper stacked (one TSV: 2*l_phy + l_link*tsv) or planar-adjacent
+    (2*l_phy + l_link) flips with ``tsv_slowdown`` — the vertical-link
+    multiplier demonstrably changes the inferred topology."""
+    from repro.arch3d.topology import _host_instances
+    rng = np.random.default_rng(0)
+    sol = _rep("stack3d32", "placeit").random(rng)
+    inst = _host_instances(resolve_arch("stack3d32", "placeit"),
+                           sol[0].reshape(-1)).reshape(4, 4, 2)
+    # a stacked pair and a planar-adjacent pair from the same placement
+    sp = next((int(inst[r, c, 0]), int(inst[r, c, 1]))
+              for r in range(4) for c in range(4)
+              if inst[r, c, 0] >= 0 and inst[r, c, 1] >= 0)
+    pp = next((int(inst[r, c, 0]), int(inst[r, c + 1, 0]))
+              for r in range(4) for c in range(3)
+              if inst[r, c, 0] >= 0 and inst[r, c + 1, 0] >= 0)
+    for tsv, stacked_wins in ((0.5, True), (16.0, False)):
+        rep = _rep("stack3d32", "placeit", tsv_slowdown=tsv)
+        D, _ = fw_counts_ref(jnp.asarray(rep.score_graph(sol).W))
+        D = np.asarray(D)
+        Vp, N = rep.layout.Vp, 32
+        d_stack = D[Vp + sp[0], Vp + N + sp[1]]
+        d_plane = D[Vp + pp[0], Vp + N + pp[1]]
+        assert np.isclose(d_stack, 24.0 + tsv, atol=1e-4)
+        assert np.isclose(d_plane, 25.0, atol=1e-4)
+        assert (d_stack < d_plane) == stacked_wins
+
+
+# ---------------------------------------------------------------------------
+# Zero-retrace: tiers are runtime operands.
+# ---------------------------------------------------------------------------
+
+def test_tier_swap_shares_stages_and_never_retraces():
+    repA = _rep("stack3d32")
+    repB = dataclasses.replace(repA, tsv_slowdown=16.0,
+                               backbone_factor=4.0)
+    assert repA.device_stage_key() == repB.device_stage_key()
+    assert DevicePipeline._stages(repA) is DevicePipeline._stages(repB)
+
+    gb = repA.graph_batch()
+    traces = []
+
+    @jax.jit
+    def build(t, r, tiers):
+        traces.append(1)
+        return gb.build(t, r, tiers)
+
+    rng = np.random.default_rng(0)
+    sol = repA.random(rng)
+    t = jnp.asarray(sol[0][None])
+    r = jnp.asarray(sol[1][None])
+    d1 = build(t, r, jnp.asarray(repA.tier_values))
+    d2 = build(t, r, jnp.asarray(repB.tier_values))
+    assert len(traces) == 1                      # one trace, two tier sets
+    assert not np.array_equal(np.asarray(d1["W"]), np.asarray(d2["W"]))
+
+
+# ---------------------------------------------------------------------------
+# End-to-end through the batched pipeline.
+# ---------------------------------------------------------------------------
+
+def test_run_sweep_ga_batched_trace_lat_3d():
+    arch = resolve_arch("stack3d32", "baseline")
+    obj = Objective().with_terms(TermSpec("trace-lat", weight=0.5))
+    cfg = ExperimentConfig(arch="stack3d32", algorithms=("ga-batched",),
+                           budget=Budget(evals=48), norm_samples=4,
+                           chunk=8, objective=obj, workload=_wl(arch))
+    res = run_sweep([cfg])
+    rec = res.runs[0].records[0]
+    assert np.isfinite(rec.result.best_cost) and rec.result.best_cost > 0
+    assert np.asarray(rec.result.best_sol[0]).shape == (4, 4, 2)
+    assert res.stats.scorers_built == 1
+
+
+def test_mixed_family_sweep_same_layout_different_edges():
+    """stack3d32 and torus3d32 share a ScoreLayout but emit different
+    edge-slot counts; ``scorer_shape_key`` must keep their compiled
+    scorers distinct so lockstep stacking never concatenates unlike
+    batches (regression: TypeError in score_stacked)."""
+    def cfg(name):
+        arch = resolve_arch(name, "baseline")
+        return ExperimentConfig(arch=name, algorithms=("ga-batched",),
+                                budget=Budget(evals=24), norm_samples=4,
+                                chunk=8)
+    res = run_sweep([cfg("stack3d32"), cfg("torus3d32")])
+    assert len(res.runs) == 2
+    for run in res.runs:
+        assert np.isfinite(run.records[0].result.best_cost)
+    assert res.stats.scorers_built == 2
+
+
+def test_design_engine_runs_3d_family():
+    from repro.serve.design import DesignEngine, DesignRequest
+    arch = resolve_arch("gw3d64", "placeit")
+    obj = Objective().with_terms(TermSpec("trace-lat", weight=0.5))
+    cfg = ExperimentConfig(arch="gw3d64", config="placeit",
+                           algorithms=("ga-batched",),
+                           budget=Budget(evals=32), norm_samples=4,
+                           chunk=8, objective=obj, workload=_wl(arch))
+    eng = DesignEngine()
+    rid = eng.submit(DesignRequest(config=cfg, request_id="t3d"))
+    eng.run()
+    resp = eng.result(rid)
+    assert resp.status == "done", getattr(resp, "error", None)
+    rec = resp.records[0]
+    assert np.isfinite(rec.result.best_cost)
+    assert np.asarray(rec.result.best_sol[0]).shape == (4, 4, 4)
+
+
+# ---------------------------------------------------------------------------
+# trace-thr objective term.
+# ---------------------------------------------------------------------------
+
+def test_trace_thr_device_cost_agrees_with_host():
+    arch = resolve_arch("stack3d32", "baseline")
+    rep = _rep("stack3d32")
+    obj = Objective().with_terms(TermSpec("trace-thr", weight=0.5))
+    ev = make_evaluator(rep, arch, rng=np.random.default_rng(0),
+                        norm_samples=4, chunk=4, objective=obj,
+                        workload=_wl(arch))
+    rng = np.random.default_rng(1)
+    _, graphs = ev.generate_valid(rep.random, rng, 6)
+    batch = ev._with_demand(stack_graphs(graphs))
+    metrics = ev.score_batch(batch)
+    for t in TRAFFIC_TYPES:
+        assert f"trace_thr_{t}" in metrics
+    # traffic is c2m-only: that class saturates somewhere (thr > 0),
+    # demandless classes contribute exactly 0
+    assert (np.asarray(metrics["trace_thr_c2m"]) > 0).all()
+    assert float(np.abs(np.asarray(metrics["trace_thr_c2i"])).max()) == 0.0
+    host = objective_cost_host(metrics, obj, ev.norm, batch=batch)
+    np.testing.assert_allclose(ev.costs_from(metrics), host,
+                               rtol=1e-4, atol=1e-5)
+    # the term adds a strictly positive summand over the trace-free base
+    base = objective_cost_host(metrics, Objective(), ev.norm)
+    assert (host > base).all()
+
+
+def test_trace_thr_requires_workload():
+    rep = _rep("stack3d32")
+    arch = rep.arch
+    obj = Objective().with_terms(TermSpec("trace-thr"))
+    with pytest.raises(ValueError, match="workload"):
+        make_evaluator(rep, arch, rng=np.random.default_rng(0),
+                       norm_samples=2, chunk=4, objective=obj)
+
+
+# ---------------------------------------------------------------------------
+# Workload-aware Pareto axes.
+# ---------------------------------------------------------------------------
+
+def test_pareto_grid_over_trace_term_weights():
+    arch = resolve_arch("stack3d32", "baseline")
+    obj = Objective(terms=()).with_terms(
+        TermSpec("trace-lat", weight=0.5), TermSpec("trace-thr", weight=0.5))
+    spec = ParetoGridSpec(term_weights={"trace-lat": (0.2, 1.0),
+                                        "trace-thr": (0.2, 1.0)})
+    cfg = ExperimentConfig(arch="stack3d32", algorithms=("ga-batched",),
+                           budget=Budget(evals=24), norm_samples=4,
+                           chunk=8, objective=obj, workload=_wl(arch))
+    front = run_pareto_sweep(cfg, spec).fronts[0]
+    assert front.term_names == ("trace-lat", "trace-thr")
+    Y = np.asarray(front.matrix)
+    assert Y.shape == (front.n_candidates, 2) and np.isfinite(Y).all()
+    assert front.n_candidates == spec.n_points
+    assert len(front.points) >= 1
+    # 3D placements round-trip through the provenance records
+    assert front.points[0].sol()[0].shape == (4, 4, 2)
+
+
+# ---------------------------------------------------------------------------
+# 3-objective hypervolume.
+# ---------------------------------------------------------------------------
+
+def test_hv3d_matches_host_recursion():
+    rng = np.random.default_rng(0)
+    ref = np.array([1.2, 1.3, 1.1])
+    for _ in range(15):
+        Y = rng.uniform(0, 1, size=(int(rng.integers(1, 12)), 3))
+        d = hypervolume(Y, ref)
+        h = hypervolume(Y, ref, device=False)
+        assert abs(d - h) < 1e-6 * max(1.0, h)
+    # hand-computed: one point dominating a 0.5-cube corner
+    assert np.isclose(hypervolume([[0.5, 0.5, 0.5]], [1, 1, 1]), 0.125)
+    # points on/beyond the reference contribute nothing
+    assert hypervolume([[1.0, 1.0, 1.0], [2.0, 0.1, 0.1]],
+                       [1.0, 1.0, 1.0]) == pytest.approx(
+        float(_hv_rec(np.minimum([[1, 1, 1], [2, .1, .1]], 1.0),
+                      np.ones(3))))
+
+
+def test_hypervolume_n4_warns_and_falls_back():
+    rng = np.random.default_rng(1)
+    Y = rng.uniform(0, 1, (5, 4))
+    ref = np.full(4, 1.5)
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        v = hypervolume(Y, ref)
+        assert any("no device path" in str(x.message) for x in w)
+    assert v == pytest.approx(_hv_rec(np.minimum(Y, ref), ref))

@@ -142,7 +142,7 @@ def test_batched_optimizers_improve_and_return_valid_solutions():
 
 
 def test_device_pipeline_rejects_unknown_rep():
-    with pytest.raises(TypeError, match="HomogRep or HeteroRep"):
+    with pytest.raises(TypeError, match="device_stage_key"):
         DevicePipeline._stages(object())
 
 

@@ -8,10 +8,11 @@ dark).  These replace the former hand-picked-seed operator spot checks in
 
 Covered properties:
 
-* ``HomogBatch`` / ``HeteroBatch`` operator invariants on randomized PRNG
-  keys — permutation validity (per-kind chiplet counts preserved by
-  random/mutate/merge), rotation ranges (non-isomorphic per-kind sets;
-  grid PHYs face occupied neighbors), merge carrying parent matches, and
+* ``HomogBatch`` / ``Homog3DBatch`` / ``HeteroBatch`` operator invariants
+  on randomized PRNG keys — permutation validity (per-kind chiplet counts
+  preserved by random/mutate/merge), rotation ranges (non-isomorphic
+  per-kind sets; grid PHYs face occupied neighbors, 3D rotations from the
+  record-backed candidate cascade), merge carrying parent matches, and
   PRNG determinism (same key -> identical batch, distinct keys -> change).
 * ``HeteroGraphBatch`` batched Borůvka vs the host Kruskal + union-find
   on randomized corner placements: bit-for-bit W / D2D edge set / area /
@@ -22,15 +23,19 @@ import numpy as np
 import pytest
 
 from _hyp import HAVE_HYPOTHESIS, given, settings, st
-from _invariants import assert_valid_hetero_batch, assert_valid_homog_batch
+from _invariants import (assert_valid_hetero_batch,
+                         assert_valid_homog3d_batch,
+                         assert_valid_homog_batch)
 
-from repro.core.chiplets import IO, MEMORY, paper_arch
+from repro.arch3d.families import make_rep3d
+from repro.core.chiplets import IO, MEMORY, paper_arch, resolve_arch
 from repro.core.placement_hetero import HeteroRep
 from repro.core.placement_homog import HomogRep
 from repro.core.topology import HeteroGraphBatch
 
 ARCH = paper_arch("homog32", "baseline")
 HARCH = paper_arch("hetero32", "baseline")
+ARCH3 = resolve_arch("stack3d32", "baseline")
 R, C = 8, 5
 B = 12          # batch size per drawn seed
 
@@ -63,6 +68,16 @@ def hgb():
     return HeteroGraphBatch(HARCH)
 
 
+@pytest.fixture(scope="module")
+def rep3():
+    return make_rep3d(ARCH3, "stack3d32")
+
+
+@pytest.fixture(scope="module")
+def ops3(rep3):
+    return rep3.batch_ops()
+
+
 # ---------------------------------------------------------------------------
 # Core property checks (shared by @given and the deterministic sweep).
 # ---------------------------------------------------------------------------
@@ -93,6 +108,35 @@ def check_homog_ops(rep, ops, seed: int):
         assert (tg_[b][match] == t_[b][match]).all()
         # carried rotations where both parents agree on type+rotation,
         # for the single-PHY kinds (baseline memory/IO)
+        rot_match = match & (r_[b] == rb_[b]) & np.isin(t_[b], [MEMORY, IO])
+        assert (rg_[b][rot_match] == r_[b][rot_match]).all()
+
+
+def check_homog3d_ops(rep3, ops3, seed: int):
+    """The 3D rep's operator invariants (mirrors ``check_homog_ops`` on
+    the [B, R, C, Z] solution shape)."""
+    R3, C3, Z3 = rep3.R, rep3.C, rep3.Z
+    k0, k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 4)
+    t, r = ops3.random_batch(k0, B)
+    assert t.dtype == np.int8 and t.shape == (B, R3, C3, Z3)
+    assert_valid_homog3d_batch(rep3, t, r)
+    # PRNG determinism: same key -> identical batch
+    t2, r2 = ops3.random_batch(k0, B)
+    assert np.array_equal(np.asarray(t), np.asarray(t2))
+    assert np.array_equal(np.asarray(r), np.asarray(r2))
+    mt, mr = ops3.mutate_batch(k1, t, r)
+    assert_valid_homog3d_batch(rep3, mt, mr)
+    changed = (np.asarray(mt) != np.asarray(t)).any(axis=(1, 2, 3)) \
+        | (np.asarray(mr) != np.asarray(r)).any(axis=(1, 2, 3))
+    assert changed.any()
+    tb, rb = ops3.random_batch(k2, B)
+    tg, rg = ops3.merge_batch(k3, t, r, tb, rb)
+    assert_valid_homog3d_batch(rep3, tg, rg)
+    t_, tb_, tg_ = np.asarray(t), np.asarray(tb), np.asarray(tg)
+    r_, rb_, rg_ = np.asarray(r), np.asarray(rb), np.asarray(rg)
+    for b in range(B):
+        match = t_[b] == tb_[b]
+        assert (tg_[b][match] == t_[b][match]).all()
         rot_match = match & (r_[b] == rb_[b]) & np.isin(t_[b], [MEMORY, IO])
         assert (rg_[b][rot_match] == r_[b][rot_match]).all()
 
@@ -159,6 +203,12 @@ def test_homog_operator_invariants_property(rep, ops, seed):
 
 @given(seed=st.integers(min_value=0, max_value=2**31 - 1))
 @settings(max_examples=MAXEX, deadline=None)
+def test_homog3d_operator_invariants_property(rep3, ops3, seed):
+    check_homog3d_ops(rep3, ops3, seed)
+
+
+@given(seed=st.integers(min_value=0, max_value=2**31 - 1))
+@settings(max_examples=MAXEX, deadline=None)
 def test_hetero_operator_invariants_property(hrep, hops, seed):
     check_hetero_ops(hrep, hops, seed)
 
@@ -179,6 +229,13 @@ def test_hetero_boruvka_vs_kruskal_property(hrep, hops, hgb, seed):
 @pytest.mark.parametrize("seed", FALLBACK_SEEDS)
 def test_homog_operator_invariants_seeds(rep, ops, seed):
     check_homog_ops(rep, ops, seed)
+
+
+@pytest.mark.skipif(HAVE_HYPOTHESIS,
+                    reason="hypothesis drives the property above")
+@pytest.mark.parametrize("seed", FALLBACK_SEEDS)
+def test_homog3d_operator_invariants_seeds(rep3, ops3, seed):
+    check_homog3d_ops(rep3, ops3, seed)
 
 
 @pytest.mark.skipif(HAVE_HYPOTHESIS,
